@@ -1,0 +1,49 @@
+"""Benchmark for the paper's Sec. III complexity table: Dif-AltGDmin vs
+Dec-AltGDmin time/communication complexity, both the analytic formulas
+(theory.py) and the MEASURED communication volume of the runtime
+aggregation strategies — the claimed κ²-vs-κ⁴ and ε-(in)dependence
+improvements made concrete.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import theory
+from repro.distributed import AggregationConfig, comm_bytes_per_step
+
+
+def bench_complexity_table():
+    """Analytic τ_time / τ_comm for the paper's Experiment-1 setting at
+    several target accuracies ε and condition numbers κ."""
+    rows = []
+    base = dict(n=30, d=600, T=600, r=4, L=20, gamma_W=0.8, max_deg=10)
+    for kappa in (1.5, 2.0, 4.0):
+        for eps in (1e-2, 1e-4, 1e-8):
+            dif = theory.dif_complexity(kappa=kappa, eps=eps, **base)
+            dec = theory.dec_complexity(kappa=kappa, eps=eps, **base)
+            rows.append({
+                "kappa": kappa, "eps": eps,
+                "dif_T_con_GD": dif.T_con_GD, "dec_T_con_GD": dec.T_con_GD,
+                "dif_tau_time": dif.tau_time, "dec_tau_time": dec.tau_time,
+                "dif_tau_comm": dif.tau_comm, "dec_tau_comm": dec.tau_comm,
+                "time_speedup": dec.tau_time / dif.tau_time,
+                "comm_reduction": dec.tau_comm / dif.tau_comm,
+            })
+    return rows
+
+
+def bench_trainer_comm():
+    """Per-step communication volume of each trainer aggregation strategy
+    for a 1B-param backbone over 16 nodes (bf16) — the deep-net analogue
+    of the paper's communication-complexity comparison."""
+    n_params, itemsize, L = 1_000_000_000, 2, 16
+    rows = []
+    for strategy, t_con in [("allreduce", 0), ("diffusion", 1),
+                            ("diffusion", 3), ("consensus", 10),
+                            ("consensus", 30), ("dgd", 1), ("local", 0)]:
+        agg = AggregationConfig(strategy=strategy, t_con=max(t_con, 1))
+        b = comm_bytes_per_step(n_params, itemsize, agg, L)
+        rows.append({"strategy": strategy, "t_con": t_con,
+                     "bytes_per_node_per_step": b,
+                     "gbytes": round(b / 1e9, 3)})
+    return rows

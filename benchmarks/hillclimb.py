@@ -1,0 +1,99 @@
+"""§Perf hillclimb driver: runs named variants of the three chosen
+(arch × shape) pairs through the dry-run pipeline and prints
+before/after roofline terms per hypothesis.
+
+MUST run in its own process (512 fake devices):
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --pair deepseek-train
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+
+from repro.launch.dryrun import run_one      # noqa: E402
+
+
+# Each experiment: (tag, kwargs for run_one).  The first entry is the
+# paper-faithful BASELINE; later entries are the hypothesis ladder.
+PAIRS = {
+    # most collective-bound + MoE (expert-parallel a2a) — drive the
+    # collective term down
+    "deepseek-train": [
+        ("baseline_diffusion_tcon1",
+         dict(arch="deepseek-v3-671b", shape_name="train_4k",
+              multi_pod=False, aggregation="diffusion", t_con=1)),
+        ("H1_allreduce_fusion_center",
+         dict(arch="deepseek-v3-671b", shape_name="train_4k",
+              multi_pod=False, aggregation="allreduce")),
+        ("H2_wire_bf16",
+         dict(arch="deepseek-v3-671b", shape_name="train_4k",
+              multi_pod=False, aggregation="diffusion", t_con=1,
+              wire_dtype="bfloat16")),
+        ("H3_wire_bf16_remat_dots",
+         dict(arch="deepseek-v3-671b", shape_name="train_4k",
+              multi_pod=False, aggregation="diffusion", t_con=1,
+              wire_dtype="bfloat16", remat_policy="dots")),
+    ],
+    # worst decode memory (MHA 32k KV cache, 77 GiB/dev) — drive the
+    # memory term / peak bytes down
+    "musicgen-decode": [
+        ("baseline",
+         dict(arch="musicgen-medium", shape_name="decode_32k",
+              multi_pod=False)),
+        ("H1_shard_cache_slots",
+         dict(arch="musicgen-medium", shape_name="decode_32k",
+              multi_pod=False, shard_cache_slots=True)),
+    ],
+    # the paper's own technique at LM scale: aggregation strategy ladder
+    "qwen3-train": [
+        ("baseline_diffusion_tcon1",
+         dict(arch="qwen3-1.7b", shape_name="train_4k", multi_pod=False,
+              aggregation="diffusion", t_con=1)),
+        ("A_consensus_tcon10_decAltGDmin",
+         dict(arch="qwen3-1.7b", shape_name="train_4k", multi_pod=False,
+              aggregation="consensus", t_con=10)),
+        ("B_allreduce_fusion_center",
+         dict(arch="qwen3-1.7b", shape_name="train_4k", multi_pod=False,
+              aggregation="allreduce")),
+        ("H1_wire_bf16",
+         dict(arch="qwen3-1.7b", shape_name="train_4k", multi_pod=False,
+              aggregation="diffusion", t_con=1, wire_dtype="bfloat16")),
+        ("H2_remat_dots",
+         dict(arch="qwen3-1.7b", shape_name="train_4k", multi_pod=False,
+              aggregation="diffusion", t_con=1, wire_dtype="bfloat16",
+              remat_policy="dots")),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True,
+                    choices=list(PAIRS) + ["all"])
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    pairs = list(PAIRS) if args.pair == "all" else [args.pair]
+    for pair in pairs:
+        print(f"\n===== {pair} =====")
+        for tag, kw in PAIRS[pair]:
+            try:
+                rec = run_one(**kw)
+            except Exception as e:
+                print(f"{tag}: FAILED {e!r}")
+                continue
+            path = os.path.join(args.out, f"{pair}_{tag}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            r = rec["roofline"]
+            print(f"{tag}: compute={r['compute_s']:.3e} "
+                  f"mem={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+                  f"dom={r['dominant']} "
+                  f"peak={rec['memory']['peak_bytes']/2**30:.1f}GiB "
+                  f"useful={r['useful_flops_ratio']:.2f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

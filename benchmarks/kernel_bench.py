@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: wall-time of the jnp production paths on CPU
+(the Pallas kernels run in interpret mode here, so CPU timings of them are
+meaningless — on-TPU projections come from the roofline instead; this
+table tracks the *reference* path and validates kernel-vs-ref agreement
+as a benchmark-time canary)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6    # µs
+
+
+def bench_kernels():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # chunked attention (production jnp path) at a prefill-ish shape
+    B, S, H, D = 1, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    from repro.models.attention import chunked_attention
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    f = jax.jit(lambda q: chunked_attention(q, q, q, pos, pos, chunk=256))
+    rows.append({"kernel": "chunked_attention", "shape": f"{B}x{S}x{H}x{D}",
+                 "us_per_call": round(_time(f, q), 1)})
+
+    # SSD chunked scan
+    from repro.models.ssm import ssd_chunked
+    Bs, Ss, Hs, P, N = 2, 512, 8, 64, 64
+    x = jax.random.normal(key, (Bs, Ss, Hs, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (Bs, Ss, Hs))) * 0.1
+    A = -jnp.exp(jax.random.normal(key, (Hs,)) * 0.3)
+    Bm = jax.random.normal(key, (Bs, Ss, N), jnp.float32)
+    D = jnp.ones((Hs,), jnp.float32)
+    g = jax.jit(lambda x, dt, Bm: ssd_chunked(x, dt, A, Bm, Bm, D, 128)[0])
+    rows.append({"kernel": "ssd_chunked", "shape": f"{Bs}x{Ss}x{Hs}x{P}",
+                 "us_per_call": round(_time(g, x, dt, Bm), 1)})
+
+    # paper's LS hot loop: kernel-vs-simulator agreement + timing
+    T, n, d, r = 32, 30, 600, 4
+    X = jax.random.normal(key, (T, n, d), jnp.float32)
+    U = jnp.linalg.qr(jax.random.normal(key, (d, r), jnp.float32))[0]
+    y = jax.random.normal(key, (T, n), jnp.float32)
+    Bk = ops.altgdmin_minimize_B(X, U, y, blk_d=200)
+    G, c = ref.ref_task_gram(X, U, y)
+    Bref = jnp.stack([jnp.linalg.solve(G[t], c[t]) for t in range(T)])
+    agree = bool(jnp.allclose(Bk, Bref, rtol=1e-3, atol=1e-4))
+    h = jax.jit(lambda X, U, y: jnp.einsum("tnr,tns->trs",
+                                           jnp.einsum("tnd,dr->tnr", X, U),
+                                           jnp.einsum("tnd,dr->tnr", X, U)))
+    rows.append({"kernel": "altgdmin_ls(ref path)",
+                 "shape": f"T{T}xn{n}xd{d}xr{r}",
+                 "us_per_call": round(_time(h, X, U, y), 1),
+                 "kernel_matches_ref": agree})
+    return rows

@@ -1,0 +1,101 @@
+"""Benchmarks reproducing the paper's two figures (scaled for CPU):
+
+  fig1 — Experiment 1: subspace distance vs iteration AND vs emulated
+         wall-clock (1 Gbps / 5 ms network model) for Dif-AltGDmin,
+         Dec-AltGDmin, centralized AltGDmin, DGD; T_con ∈ {2, 5, 10}.
+  fig2 — Experiment 2: robustness to connectivity, p ∈ {0.2, 0.5, 0.8}.
+
+Each returns rows of CSV records; benchmarks.run prints them and writes
+experiments/bench/*.csv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    generate_problem, node_view, decentralized_spectral_init,
+    dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
+)
+from repro.core.altgdmin import resolve_eta
+from repro.core.comm_model import (
+    decentralized_time_axis, centralized_time_axis, ETHERNET_1GBPS,
+)
+from repro.distributed import erdos_renyi, metropolis_weights, gamma
+
+
+def _setup(cfg, trial: int):
+    prob = generate_problem(jax.random.PRNGKey(cfg.seed + trial),
+                            d=cfg.d, T=cfg.T, r=cfg.r, n=cfg.n, L=cfg.L,
+                            kappa=2.0)
+    Xg, yg = node_view(prob)
+    graph = erdos_renyi(cfg.L, cfg.p, seed=cfg.seed + 100 + trial)
+    W = jnp.asarray(metropolis_weights(graph))
+    init = decentralized_spectral_init(
+        jax.random.PRNGKey(cfg.seed + 200 + trial), Xg, yg, W,
+        kappa=prob.kappa, mu=prob.mu, r=cfg.r, T_pm=cfg.T_pm,
+        T_con=cfg.T_con)
+    eta = resolve_eta(None, cfg.n, R_diag=init.R_diag, L=cfg.L)
+    return prob, Xg, yg, graph, W, init, eta
+
+
+def _algorithms(cfg, prob, Xg, yg, graph, W, init, eta):
+    kw = dict(eta=eta, T_GD=cfg.T_GD, U_star=prob.U_star)
+    return {
+        "dif_altgdmin": lambda: dif_altgdmin(init.U0, Xg, yg, W,
+                                             T_con=cfg.T_con, **kw),
+        "dec_altgdmin": lambda: dec_altgdmin(init.U0, Xg, yg, W,
+                                             T_con=cfg.T_con, **kw),
+        "altgdmin_central": lambda: centralized_altgdmin(init.U0[0], Xg,
+                                                         yg, **kw),
+        "dgd_variant": lambda: dgd_altgdmin(
+            init.U0, Xg, yg, jnp.asarray(graph.adj, jnp.float64), **kw),
+    }
+
+
+def _time_axis(alg: str, cfg, graph, n_iters: int):
+    if alg == "altgdmin_central":
+        return centralized_time_axis(n_iters, cfg.d, cfg.r, cfg.L, 1e-3)
+    t_con = 1 if alg == "dgd_variant" else cfg.T_con
+    return decentralized_time_axis(n_iters, t_con, cfg.d, cfg.r,
+                                   graph.max_degree, 1e-3)
+
+
+def run_experiment(configs, n_trials: int, checkpoints=(0, 0.25, 0.5,
+                                                        0.75, 1.0)):
+    rows = []
+    for cfg in configs:
+        acc = {}
+        for trial in range(n_trials):
+            prob, Xg, yg, graph, W, init, eta = _setup(cfg, trial)
+            for alg, fn in _algorithms(cfg, prob, Xg, yg, graph, W, init,
+                                       eta).items():
+                sd = np.asarray(fn().sd_max)
+                acc.setdefault(alg, []).append((sd, graph))
+        for alg, runs in acc.items():
+            sds = np.stack([sd for sd, _ in runs])
+            mean_sd = sds.mean(axis=0)
+            t_axis = _time_axis(alg, cfg, runs[0][1], len(mean_sd))
+            for frac in checkpoints:
+                i = min(int(frac * (len(mean_sd) - 1)), len(mean_sd) - 1)
+                rows.append({
+                    "config": cfg.name, "algorithm": alg,
+                    "T_con": cfg.T_con, "p": cfg.p, "iteration": i,
+                    "subspace_distance": float(mean_sd[i]),
+                    "emulated_time_s": float(t_axis[i]),
+                    "n_trials": n_trials,
+                })
+    return rows
+
+
+def bench_fig1(n_trials: int = 2):
+    """Experiment 1: vary T_con (uses the scaled-down preset)."""
+    from repro.configs.paper import EXPERIMENT1_SMALL
+    return run_experiment(EXPERIMENT1_SMALL, n_trials)
+
+
+def bench_fig2(n_trials: int = 2):
+    """Experiment 2: vary edge probability p."""
+    from repro.configs.paper import EXPERIMENT2_SMALL
+    return run_experiment(EXPERIMENT2_SMALL, n_trials)

@@ -1,0 +1,111 @@
+"""Roofline-table builder: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline markdown table and a machine-readable CSV.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return [r for r in recs if r.get("status") == "ok"]
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def what_would_help(rec) -> str:
+    dom = rec["roofline"]["dominant"]
+    kind = rec["kind"]
+    if dom == "collective":
+        return ("fewer/smaller collectives: larger per-node shards, "
+                "gossip instead of all-reduce, or overlap with compute")
+    if dom == "memory":
+        if kind == "decode":
+            return ("decode is weight/cache-streaming bound: quantize "
+                    "weights/KV or batch more tokens per weight read")
+        return ("raise arithmetic intensity: fuse ops, larger blocks, "
+                "bf16 activations, avoid re-materialization")
+    return "compute-bound — already near the useful roofline; check MFU"
+
+
+def build_rows(recs, mesh_filter="16x16"):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh_filter:
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "kind": r["kind"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"],
+            "model_flops": rf["model_flops_total"],
+            "hlo_flops": rf["hlo_flops_total"],
+            "useful_ratio": rf["useful_flops_ratio"],
+            "peak_gib_per_dev": r["memory"]["peak_bytes"] / 2**30,
+            "dominant_collective": r.get("dominant_collective", ""),
+            "note": r.get("note", ""),
+        })
+    rows.sort(key=lambda x: (x["arch"], SHAPE_ORDER.index(x["shape"])))
+    return rows
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful FLOPs | peak GiB/dev |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        ur = (f"{r['useful_ratio']:.2f}" if r["useful_ratio"]
+              else "n/a")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {ur} | "
+            f"{r['peak_gib_per_dev']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", default="experiments/bench/roofline.csv")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    rows = build_rows(recs, args.mesh)
+    print(markdown_table(rows))
+    print(f"\n{len(rows)} rows ({args.mesh}); "
+          f"{len(recs)} ok records total")
+    # dominant-term census + hillclimb candidates
+    from collections import Counter
+    print("bottleneck census:", Counter(r["dominant"] for r in rows))
+    worst = sorted(rows, key=lambda r: -(r["useful_ratio"] or 0))
+    coll = sorted(rows, key=lambda r: -r["collective_s"] /
+                  max(r["compute_s"] + r["memory_s"], 1e-12))
+    print("most collective-bound:",
+          [(r['arch'], r['shape']) for r in coll[:3]])
+    os.makedirs(os.path.dirname(args.csv), exist_ok=True)
+    import csv as _csv
+    with open(args.csv, "w", newline="") as f:
+        w = _csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness — one benchmark per paper figure/table plus the
+trainer-communication and kernel tables.  Prints CSV blocks and writes
+them under experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import os
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def emit(name: str, rows, outdir: str):
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    fields = list(dict.fromkeys(k for r in rows for k in r))
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=fields, restval="")
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    text = buf.getvalue()
+    print(f"\n# ===== {name} =====")
+    print(text)
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, f"{name}.csv"), "w") as f:
+        f.write(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="1 trial per config (CI mode)")
+    ap.add_argument("--out", default="experiments/bench")
+    args, _ = ap.parse_known_args()
+    trials = 1 if args.quick else 2
+
+    from benchmarks.paper_figs import bench_fig1, bench_fig2
+    from benchmarks.complexity import (bench_complexity_table,
+                                       bench_trainer_comm)
+    from benchmarks.kernel_bench import bench_kernels
+
+    t0 = time.time()
+    emit("fig1_convergence_vs_Tcon", bench_fig1(trials), args.out)
+    print(f"[fig1 done in {time.time()-t0:.0f}s]")
+    t1 = time.time()
+    emit("fig2_connectivity", bench_fig2(trials), args.out)
+    print(f"[fig2 done in {time.time()-t1:.0f}s]")
+    emit("sec3_complexity_dif_vs_dec", bench_complexity_table(), args.out)
+    emit("trainer_comm_per_step", bench_trainer_comm(), args.out)
+    emit("kernel_micro", bench_kernels(), args.out)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""The paper's algorithm on the production mesh: Dif-AltGDmin with nodes
+= devices and AGREE = collective-permute ring gossip (shard_map), checked
+against the single-host simulator.
+
+Needs multiple devices, so it re-executes itself with 8 fake CPU devices
+if started with only one.
+
+  PYTHONPATH=src python examples/distributed_mtrl.py
+"""
+import os
+import subprocess
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    raise SystemExit(subprocess.run([sys.executable] + sys.argv).returncode)
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+from repro.core import (                                      # noqa: E402
+    generate_problem, node_view, decentralized_spectral_init,
+    dif_altgdmin, dif_altgdmin_mesh, subspace_distance,
+)
+from repro.core.altgdmin import resolve_eta                   # noqa: E402
+from repro.distributed import circulant_weights               # noqa: E402
+
+
+def main():
+    L = 8
+    print(f"devices: {len(jax.devices())} (one Dec-MTRL node per device)")
+    prob = generate_problem(jax.random.PRNGKey(0), d=100, T=64, r=4, n=30,
+                            L=L, kappa=2.0)
+    Xg, yg = node_view(prob)
+    W = jnp.asarray(circulant_weights(L, (-1, 1)))    # ring = ICI-native
+    init = decentralized_spectral_init(
+        jax.random.PRNGKey(1), Xg, yg, W, kappa=prob.kappa, mu=prob.mu,
+        r=prob.r, T_pm=25, T_con=8)
+    eta = resolve_eta(None, prob.n, R_diag=init.R_diag, L=L)
+
+    mesh = jax.make_mesh((L,), ("nodes",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    U_hw, _ = dif_altgdmin_mesh(init.U0, Xg, yg, mesh, "nodes", eta=eta,
+                                T_GD=200, T_con=2)
+    sim = dif_altgdmin(init.U0, Xg, yg, W, eta=eta, T_GD=200, T_con=2,
+                       U_star=prob.U_star)
+
+    sd_hw = max(float(subspace_distance(U, prob.U_star)) for U in U_hw)
+    sd_sim = float(sim.sd_max[-1])
+    drift = float(jnp.max(jnp.abs(U_hw - sim.U_nodes)))
+    print(f"mesh runtime   : SD₂ = {sd_hw:.2e}  (ring gossip, T_con=2, "
+          f"200 iters)")
+    print(f"simulator (W)  : SD₂ = {sd_sim:.2e}")
+    print(f"max |U_hw − U_sim| = {drift:.2e}  (identical algorithm, "
+          f"collective-permute vs matmul gossip)")
+    assert drift < 1e-7
+    print("\nOnly the d×r iterate crossed the wire — X, y, B stayed "
+          "node-local (federated).")
+
+
+if __name__ == "__main__":
+    main()

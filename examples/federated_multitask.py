@@ -1,0 +1,81 @@
+"""Federated multi-task representation learning with per-node task heads —
+the paper's shared-U / local-B structure mapped onto a deep net.
+
+L nodes train a SHARED transformer backbone on node-local data with
+node-specific lm_heads (the federated carve-out: heads never leave their
+node, exactly like the paper's B_g).  The backbone is synchronized by the
+paper's diffusion strategy; we compare against the fusion-center
+allreduce and against no communication at all.
+
+  PYTHONPATH=src python examples/federated_multitask.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.distributed.aggregation import AggregationConfig
+from repro.launch import steps as steps_lib
+from repro.models import init_params
+from repro.optim import adamw, constant
+
+N_NODES, SEQ, PER_NODE_B, STEPS = 4, 64, 4, 120
+
+
+def node_batches(cfg, step):
+    """Each node draws from a DIFFERENT synthetic task distribution (its
+    own seed ⇒ its own Markov stream) — multi-task, data-scarce."""
+    batches = []
+    for g in range(N_NODES):
+        ds = SyntheticLM(cfg.vocab_size, SEQ, PER_NODE_B, seed=1000 + g)
+        b = ds.batch(step)
+        batches.append(b["tokens"])
+    toks = jnp.stack(batches)                    # (L, B, S)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+
+
+def run(strategy: str, t_con: int = 1, steps: int = STEPS):
+    cfg = get_config("qwen3-1.7b").smoke()
+    params = steps_lib.replicate_for_nodes(
+        init_params(jax.random.PRNGKey(0), cfg), N_NODES)
+    opt = adamw(constant(1e-3))
+    state = steps_lib.TrainState(params, opt.init(params),
+                                 jnp.zeros((), jnp.int32))
+    agg = AggregationConfig(strategy=strategy, t_con=t_con,
+                            local_patterns=("embed", "lm_head"))
+    step_fn = jax.jit(steps_lib.make_train_step_fused(cfg, opt, agg,
+                                                      N_NODES))
+    losses = []
+    for i in range(steps):
+        state, m = step_fn(state, node_batches(cfg, i))
+        losses.append(float(m["loss"]))
+    # backbone spread: how far apart are the nodes' backbones?
+    spreads = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            state.params)[0]:
+        p = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "seg" in p:
+            spreads.append(float(jnp.max(jnp.abs(leaf - leaf.mean(0)))))
+    return losses, max(spreads)
+
+
+def main():
+    print(f"{N_NODES} nodes, node-local task heads (federated), "
+          f"{STEPS} steps\n")
+    print(f"{'strategy':<22}{'loss@0':>9}{'loss@end':>10}"
+          f"{'backbone spread':>18}")
+    for strategy, t_con in [("diffusion", 1), ("allreduce", 0),
+                            ("local", 0)]:
+        losses, spread = run(strategy, t_con)
+        print(f"{strategy + (f' (T_con={t_con})' if t_con else ''):<22}"
+              f"{losses[0]:>9.4f}{losses[-1]:>10.4f}{spread:>18.2e}")
+    print("\nTakeaways:")
+    print(" * diffusion tracks the fusion-center loss with 1 gossip round")
+    print("   per step (params only, heads stay local — federated);")
+    print(" * allreduce keeps replicas exactly equal (spread 0);")
+    print(" * no communication ('local') lets node backbones drift apart.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Quickstart — the paper in 60 seconds.
+
+Reproduces (at reduced scale) the paper's Experiment 1 comparison: the
+proposed Dif-AltGDmin vs centralized AltGDmin, Dec-AltGDmin, and the
+DGD-variant, on synthetic multi-task linear regression over an
+Erdős–Rényi network.  Prints the subspace-distance trajectory of each.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp                                     # noqa: E402
+import numpy as np                                          # noqa: E402
+
+from repro.core import (                                    # noqa: E402
+    generate_problem, node_view, decentralized_spectral_init,
+    dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
+)
+from repro.core.altgdmin import resolve_eta                 # noqa: E402
+from repro.distributed import (                             # noqa: E402
+    erdos_renyi, metropolis_weights, gamma,
+)
+
+
+def main():
+    # scaled-down Experiment 1: L=10 nodes, d=T=150, r=4, n=30, p=0.5
+    L, d, T, r, n = 10, 150, 150, 4, 30
+    prob = generate_problem(jax.random.PRNGKey(0), d=d, T=T, r=r, n=n,
+                            L=L, kappa=2.0)
+    Xg, yg = node_view(prob)
+    graph = erdos_renyi(L, 0.5, seed=1)
+    W = jnp.asarray(metropolis_weights(graph))
+    print(f"Dec-MTRL: L={L} nodes, d={d}, T={T} tasks, r={r}, n={n} "
+          f"samples/task (data-scarce: n < d)")
+    print(f"network: Erdős–Rényi p=0.5, γ(W)={gamma(np.asarray(W)):.3f}")
+
+    init = decentralized_spectral_init(
+        jax.random.PRNGKey(1), Xg, yg, W, kappa=prob.kappa, mu=prob.mu,
+        r=r, T_pm=30, T_con=10)
+    eta = resolve_eta(None, n, R_diag=init.R_diag, L=L)
+    kw = dict(eta=eta, T_GD=250, U_star=prob.U_star)
+
+    runs = {
+        "Dif-AltGDmin (paper, T_con=3)":
+            dif_altgdmin(init.U0, Xg, yg, W, T_con=3, **kw),
+        "Dec-AltGDmin [9]  (T_con=3)":
+            dec_altgdmin(init.U0, Xg, yg, W, T_con=3, **kw),
+        "AltGDmin [10] (centralized)":
+            centralized_altgdmin(init.U0[0], Xg, yg, **kw),
+        "DGD-variant (baseline)":
+            dgd_altgdmin(init.U0, Xg, yg,
+                         jnp.asarray(graph.adj, jnp.float64), **kw),
+    }
+
+    print(f"\n{'algorithm':<32}" + "".join(f"τ={t:<9}" for t in
+                                           (0, 50, 100, 150, 200, 249)))
+    for name, res in runs.items():
+        sd = np.asarray(res.sd_max)
+        row = "".join(f"{sd[t]:<10.2e}" for t in (0, 50, 100, 150, 200, 249))
+        print(f"{name:<32}{row}")
+
+    print("\nTakeaways (= the paper's Fig. 1):")
+    print(" * Dif-AltGDmin converges linearly, at the same order as the")
+    print("   centralized algorithm, with only 3 gossip rounds/iteration;")
+    print(" * Dec-AltGDmin plateaus at a T_con-dependent error floor;")
+    print(" * the DGD-variant fails to converge for this non-convex "
+          "problem.")
+
+
+if __name__ == "__main__":
+    main()

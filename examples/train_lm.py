@@ -1,0 +1,90 @@
+"""End-to-end driver: train an LM for a few hundred steps with the
+paper's diffusion aggregation, demonstrating loss decrease (the synthetic
+Markov stream has ~ln 17 ≈ 2.8 nats of irreducible entropy, so learning is
+visible) and a checkpoint save/restore round-trip.
+
+Default model is CPU-sized (~15M params; one core drives this whole run);
+``--hundred-m`` selects the ~100M-parameter variant for real hardware.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.distributed.aggregation import AggregationConfig
+from repro.launch import steps as steps_lib
+from repro.models import init_params, count_params
+from repro.optim import adamw, warmup_cosine
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--aggregation", default="diffusion")
+    ap.add_argument("--hundred-m", action="store_true",
+                    help="~100M-param variant (needs real hardware)")
+    args = ap.parse_args()
+
+    if args.hundred_m:
+        size = dict(n_layers=8, d_model=768, n_heads=12, n_kv_heads=4,
+                    d_head=64, d_ff=3072, vocab_size=32768)
+    else:       # ~15M params, trains visibly in minutes on one CPU core
+        size = dict(n_layers=4, d_model=320, n_heads=4, n_kv_heads=2,
+                    d_head=80, d_ff=1024, vocab_size=4096)
+    cfg = dataclasses.replace(
+        get_config("qwen3-1.7b"), name="qwen3-mini", remat=False,
+        dtype="float32", **size)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_params = count_params(params)
+    print(f"model: {cfg.name}  ({n_params/1e6:.1f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model})")
+
+    n_nodes, per_node, seq = args.nodes, 4, 128
+    params = steps_lib.replicate_for_nodes(params, n_nodes)
+    opt = adamw(warmup_cosine(3e-3, 30, args.steps), weight_decay=0.01)
+    state = steps_lib.TrainState(params, opt.init(params),
+                                 jnp.zeros((), jnp.int32))
+    agg = AggregationConfig(strategy=args.aggregation, t_con=1,
+                            local_patterns=("embed", "lm_head"))
+    step_fn = jax.jit(steps_lib.make_train_step_fused(cfg, opt, agg,
+                                                      n_nodes))
+    ds = SyntheticLM(cfg.vocab_size, seq, n_nodes * per_node, seed=0)
+    # fixed 10-batch pool (epochs over a small dataset ⇒ visible learning
+    # dynamics within a few hundred steps on one CPU core)
+    pool = [ds.batch(i)["tokens"].reshape(n_nodes, per_node, seq)
+            for i in range(10)]
+
+    t0, first = time.time(), None
+    for i in range(args.steps):
+        toks = pool[i % len(pool)]
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+        state, m = step_fn(state, batch)
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {loss:.4f}  "
+                  f"({time.time()-t0:.1f}s)")
+    assert loss < first, "loss did not decrease"
+    print(f"\nloss {first:.4f} → {loss:.4f} over {args.steps} steps "
+          f"({args.aggregation} aggregation, {n_nodes} nodes)")
+
+    # checkpoint round-trip
+    path = "/tmp/repro_train_lm_ckpt"
+    save_checkpoint(path, args.steps, state.params)
+    restored = restore_checkpoint(path, args.steps, state.params)
+    for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                    jax.tree_util.tree_leaves(restored)):
+        assert (jnp.asarray(a) == jnp.asarray(b)).all()
+    print(f"checkpoint round-trip OK ({path})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Checkpointing: flatten a pytree to path-keyed .npz shards + a msgpack
+manifest.  No orbax/tensorstore dependency; restore rebuilds the exact
+tree structure (dicts, lists, NamedTuples are round-tripped by key path).
+
+Layout:
+    <dir>/step_000100/
+        manifest.msgpack      # treedef repr + leaf paths + dtypes/shapes
+        shard_00000.npz       # leaf arrays (chunked ≤ ``shard_bytes``)
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+             for path, _ in leaves_with_paths]
+    leaves = [leaf for _, leaf in leaves_with_paths]
+    return paths, leaves
+
+
+def save_checkpoint(directory: str, step: int, tree,
+                    shard_bytes: int = 1 << 30) -> str:
+    """Save ``tree`` under directory/step_{step:09d}. Returns the path."""
+    path = os.path.join(directory, f"step_{step:09d}")
+    os.makedirs(path, exist_ok=True)
+    paths, leaves = _flatten_with_paths(tree)
+    leaves = [np.asarray(x) for x in leaves]
+
+    shards, cur, cur_bytes = [], {}, 0
+    index = {}
+    for p, arr in zip(paths, leaves):
+        if cur_bytes + arr.nbytes > shard_bytes and cur:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+        key = f"a{len(cur)}"
+        cur[key] = arr
+        index[p] = (len(shards), key)
+        cur_bytes += arr.nbytes
+    if cur:
+        shards.append(cur)
+
+    for i, shard in enumerate(shards):
+        np.savez(os.path.join(path, f"shard_{i:05d}.npz"), **shard)
+    manifest = {
+        "step": step,
+        "index": {p: list(v) for p, v in index.items()},
+        "treedef": jax.tree_util.tree_structure(tree).__repr__(),
+    }
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return path
+
+
+def restore_checkpoint(directory: str, step: int, like):
+    """Restore into the structure of ``like`` (a template pytree with the
+    same treedef — e.g. freshly-initialized params)."""
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    shards = {}
+
+    def load_shard(i):
+        if i not in shards:
+            shards[i] = np.load(os.path.join(path, f"shard_{i:05d}.npz"))
+        return shards[i]
+
+    paths, leaves = _flatten_with_paths(like)
+    treedef = jax.tree_util.tree_structure(like)
+    out = []
+    for p, leaf in zip(paths, leaves):
+        if p not in manifest["index"]:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        si, key = manifest["index"][p]
+        arr = load_shard(si)[key]
+        dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        out.append(jnp.asarray(arr, dtype=dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str):
+    """Highest step number present, or None."""
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None

@@ -1,0 +1,32 @@
+"""Architecture registry: ``get_config("<arch-id>")`` returns the exact
+assigned configuration; every entry cites its source in ``citation``."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+from repro.configs.granite_20b import CONFIG as granite_20b
+from repro.configs.command_r_35b import CONFIG as command_r_35b
+from repro.configs.zamba2_7b import CONFIG as zamba2_7b
+from repro.configs.arctic_480b import CONFIG as arctic_480b
+from repro.configs.mamba2_130m import CONFIG as mamba2_130m
+from repro.configs.phi4_mini_3_8b import CONFIG as phi4_mini_3_8b
+from repro.configs.deepseek_v3_671b import CONFIG as deepseek_v3_671b
+from repro.configs.qwen3_1_7b import CONFIG as qwen3_1_7b
+from repro.configs.musicgen_medium import CONFIG as musicgen_medium
+from repro.configs.llava_next_mistral_7b import CONFIG as llava_next_mistral_7b
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        granite_20b, command_r_35b, zamba2_7b, arctic_480b, mamba2_130m,
+        phi4_mini_3_8b, deepseek_v3_671b, qwen3_1_7b, musicgen_medium,
+        llava_next_mistral_7b,
+    ]
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

@@ -1,0 +1,33 @@
+"""deepseek-v3-671b — [moe] 61L d_model=7168 128H (kv=128 ⇒ MHA post-MLA)
+d_ff=2048(expert) vocab=129280 — MLA (q_lora 1536, kv_lora 512, rope 64,
+nope 128), 1 shared + 256 routed experts top-8, first 3 layers dense,
+sigmoid router scores [arXiv:2412.19437].
+
+Simplification (DESIGN.md §8): the MTP (multi-token-prediction) auxiliary
+head is omitted — single-token LM head only.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,                # dense layers / shared expert hidden dim
+    vocab_size=129280,
+    attn_impl="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    rope_head_dim=64,
+    nope_head_dim=128,
+    v_head_dim=128,
+    n_experts=256,
+    top_k=8,
+    n_shared_experts=1,
+    moe_d_ff=2048,             # routed expert hidden dim (assignment d_ff)
+    first_dense_layers=3,
+    router_score="sigmoid_norm",
+    citation="arXiv:2412.19437",
+)

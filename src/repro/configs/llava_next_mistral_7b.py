@@ -1,0 +1,24 @@
+"""llava-next-mistral-7b — [vlm] 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — mistral-7b backbone + anyres tiling
+[hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+Vision tower + projector are the stubbed frontend (DESIGN.md carve-out):
+``input_specs`` feeds pre-projected patch embeddings; anyres tiling is
+approximated by a fixed budget of 2880 patch tokens (5 tiles × 576)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    arch_type="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    modality="vlm",
+    vis_tokens=2880,           # anyres: base 576 + 4 tiles × 576
+    sliding_window=4096,       # mistral-7b-v0.1 sliding-window attention
+    rope_theta=10_000.0,
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

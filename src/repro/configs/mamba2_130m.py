@@ -1,0 +1,22 @@
+"""mamba2-130m — [ssm] 24L d_model=768 (attention-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    d_head=64,
+    d_ff=0,                    # Mamba2 blocks have no separate FFN
+    vocab_size=50280,
+    attn_impl="none",
+    block_pattern="ssm",
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,              # d_inner = 1536, 24 heads of dim 64
+    tie_embeddings=True,
+    citation="arXiv:2405.21060",
+)

@@ -1,0 +1,19 @@
+"""musicgen-medium — [audio] 48L d_model=1536 24H (kv=24 ⇒ MHA) d_ff=6144
+vocab=2048 — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+The EnCodec codec is the stubbed frontend (DESIGN.md carve-out): the
+backbone consumes the 2048-entry codebook token stream directly."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    modality="audio",
+    citation="arXiv:2306.05284",
+)

@@ -1,0 +1,23 @@
+"""zamba2-7b — [hybrid] 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 backbone + weight-tied shared attention
+block every 6th layer [arXiv:2411.15242]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    arch_type="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,             # the shared attn block is full MHA
+    d_ff=14336,
+    vocab_size=32000,
+    block_pattern="zamba",
+    shared_attn_period=6,      # 13 groups of 6 + 3 trailing mamba layers
+    ssm_state=64,
+    ssm_headdim=64,
+    ssm_expand=2,
+    # windowed shared attention makes the 500k decode admissible (hybrid)
+    sliding_window=8192,
+    citation="arXiv:2411.15242",
+)

@@ -1,0 +1,17 @@
+# The paper's primary contribution: Dif-AltGDmin (diffusion-based
+# decentralized federated multi-task representation learning), plus the
+# baselines it compares against, as a faithful single-host simulator.
+# The production mesh runtime lives in repro.distributed / repro.launch.
+from repro.core.problem import MTRLProblem, generate_problem, split_samples, node_view
+from repro.core.metrics import (
+    subspace_distance, subspace_distance_F, task_error, consensus_spread,
+)
+from repro.core.agree import agree
+from repro.core.spectral import decentralized_spectral_init
+from repro.core.altgdmin import (
+    dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
+    minimize_B, grad_U, RunResult,
+)
+from repro.core import theory
+from repro.core import comm_model
+from repro.core.runtime import dif_altgdmin_mesh

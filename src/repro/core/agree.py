@@ -1,0 +1,38 @@
+"""AGREE — the agreement (gossip) protocol, Algorithm 1.
+
+Simulator form: all node variables are stacked on a leading axis
+``Z: (L, ...)`` and one gossip round is the exact mixing product
+``Z ← W @ Z`` (the paper's line 4,
+``Z_g ← Z_g + Σ_{j∈N_g} (1/deg_g)(Z_j − Z_g)``, is precisely this product
+with the equal-neighbor W of repro.distributed.mixing).
+
+Proposition 1: after T_con rounds on a connected graph,
+max_g |z_g − z̄| ≤ γ(W)^{T_con} · max_g |z_g^{(in)} − z̄|.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def agree(Z: jax.Array, W: jax.Array, T_con: int) -> jax.Array:
+    """Run T_con gossip rounds. Z: (L, ...), W: (L, L). Static unroll is
+    avoided via lax.scan so T_GD-deep outer loops stay compile-cheap."""
+    if T_con == 0:
+        return Z
+    W = W.astype(Z.dtype)
+    flat = Z.reshape(Z.shape[0], -1)
+
+    def body(carry, _):
+        return W @ carry, None
+
+    out, _ = jax.lax.scan(body, flat, None, length=T_con)
+    return out.reshape(Z.shape)
+
+
+def agree_power(Z: jax.Array, W: jax.Array, T_con: int) -> jax.Array:
+    """Equivalent single-product form using W^{T_con}; useful when the same
+    (W, T_con) is reused many times (the matrix power is precomputable)."""
+    Wp = jnp.linalg.matrix_power(W, T_con).astype(Z.dtype)
+    flat = Z.reshape(Z.shape[0], -1)
+    return (Wp @ flat).reshape(Z.shape)

@@ -1,0 +1,75 @@
+"""Communication wall-clock model of the paper's Sec. V simulations.
+
+The paper emulates a 1 Gbps / 5 ms network: per AGREE message
+    t_comm = 5·10⁻³ + 8·d·r / 10⁹ + jitter   seconds
+(double precision, 8 bytes/entry), with parallel send/receive — only the
+max over a node's concurrent transfers counts.  We reproduce that model so
+Fig. 1/2 "execution time" x-axes are comparable, and extend it with the
+TPU-fabric constants used by the roofline analysis (50 GB/s/link ICI) so
+the same experiment can be re-costed on the production target.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    bandwidth_bytes: float = 1e9 / 8     # 1 Gbps, in bytes/s
+    latency_s: float = 5e-3
+    jitter_std_s: float = 2e-4
+    bytes_per_entry: int = 8             # double precision
+
+    def message_time(self, n_entries: int, rng: np.random.Generator | None
+                     = None) -> float:
+        """t_comm for one message of ``n_entries`` scalars (paper Sec. V)."""
+        t = self.latency_s + self.bytes_per_entry * n_entries / self.bandwidth_bytes
+        if rng is not None and self.jitter_std_s > 0:
+            t += float(abs(rng.normal(0.0, self.jitter_std_s)))
+        return t
+
+
+ETHERNET_1GBPS = NetworkModel()                         # the paper's network
+TPU_ICI = NetworkModel(bandwidth_bytes=50e9, latency_s=1e-6,
+                       jitter_std_s=0.0, bytes_per_entry=2)   # bf16 on ICI
+
+
+def agree_round_time(d: int, r: int, max_deg: int, model: NetworkModel,
+                     rng: np.random.Generator | None = None,
+                     parallel: bool = True) -> float:
+    """Wall-clock of ONE gossip round exchanging a d×r matrix with every
+    neighbour.  With parallel send/receive (the paper's assumption) only the
+    slowest concurrent message counts; otherwise they serialize."""
+    times = [model.message_time(d * r, rng) for _ in range(max_deg)]
+    return max(times) if parallel else sum(times)
+
+
+def decentralized_time_axis(n_iters: int, T_con: int, d: int, r: int,
+                            max_deg: int, compute_time_per_iter: float,
+                            model: NetworkModel = ETHERNET_1GBPS,
+                            seed: int = 0) -> np.ndarray:
+    """Cumulative wall-clock after each outer iteration for a decentralized
+    run: per iteration, T_con gossip rounds + local compute."""
+    rng = np.random.default_rng(seed)
+    per_iter = np.array([
+        sum(agree_round_time(d, r, max_deg, model, rng) for _ in range(T_con))
+        + compute_time_per_iter
+        for _ in range(n_iters)])
+    return np.cumsum(per_iter)
+
+
+def centralized_time_axis(n_iters: int, d: int, r: int, L: int,
+                          compute_time_per_iter: float,
+                          model: NetworkModel = ETHERNET_1GBPS,
+                          seed: int = 0) -> np.ndarray:
+    """Centralized AltGDmin: one gather of gradients (L parallel uploads) +
+    one broadcast of U per iteration."""
+    rng = np.random.default_rng(seed)
+    per_iter = np.array([
+        max(model.message_time(d * r, rng) for _ in range(L))     # gather
+        + max(model.message_time(d * r, rng) for _ in range(L))   # broadcast
+        + compute_time_per_iter
+        for _ in range(n_iters)])
+    return np.cumsum(per_iter)

@@ -1,0 +1,35 @@
+"""Subspace-distance and recovery metrics (paper Sec. II, Notations)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def subspace_distance(U1, U2):
+    """SD₂(U1, U2) := ||(I − U1 U1ᵀ) U2||₂ (spectral norm).
+
+    U1 and U2 must have orthonormal columns. Computed without forming the
+    d×d projector: ||(I − P)U2||₂ = ||U2 − U1 (U1ᵀU2)||₂.
+    """
+    M = U2 - U1 @ (U1.T @ U2)
+    return jnp.linalg.norm(M, ord=2)
+
+
+def subspace_distance_F(U1, U2):
+    """Frobenius-norm variant."""
+    M = U2 - U1 @ (U1.T @ U2)
+    return jnp.linalg.norm(M)
+
+
+def task_error(theta_hat, theta_star):
+    """Relative per-task error max_t ||θ̂_t − θ*_t|| / ||θ*_t|| (Theorem 1.1).
+    theta_*: (d, T)."""
+    num = jnp.linalg.norm(theta_hat - theta_star, axis=0)
+    den = jnp.linalg.norm(theta_star, axis=0)
+    return jnp.max(num / den)
+
+
+def consensus_spread(U_nodes):
+    """max_{g,g'} ||U_g − U_g'||_F over the node axis (UconsErr of Sec. IV).
+    U_nodes: (L, d, r)."""
+    diff = U_nodes[:, None] - U_nodes[None, :]
+    return jnp.max(jnp.sqrt(jnp.sum(diff ** 2, axis=(-2, -1))))

@@ -1,0 +1,81 @@
+"""Decentralized truncated spectral initialization — Algorithm 2.
+
+Steps (per node g, simulator layout: node axis leading):
+  1. local truncation level  α_g^(in) = 9κ²μ² (L/nT) Σ_{t∈S_g} Σ_i y_ti²,
+     AGREE'd to an approximate global average α_g;
+  2. truncated covariance columns Θ_g^(0) = [ (1/n) X_tᵀ y_t,trnc ]_{t∈S_g};
+  3. decentralized orthogonal (power) iteration on (1/L) Σ_g Θ_g Θ_gᵀ:
+     local matmul → AGREE → local QR, repeated T_pm times (all nodes start
+     from the SAME Gaussian seed, paper line 8);
+  4. broadcast of node 0's basis via AGREE (paper lines 14–15) followed by a
+     local QR to restore orthonormality — this pins node-wise consistency
+     ρ^(0). (The pseudocode places the broadcast inside the τ-loop; running
+     it once after the loop is equivalent for the guarantee and cheaper —
+     noted deviation.)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agree import agree
+
+
+class SpectralInit(NamedTuple):
+    U0: jax.Array        # (L, d, r) initial bases per node
+    R_diag: jax.Array    # (L, r) diagonal of the final power-method R
+    alpha: jax.Array     # (L,) truncation levels after AGREE
+
+
+def _qr_pos(M):
+    """QR with positive-diagonal R for determinism across nodes."""
+    Q, R = jnp.linalg.qr(M)
+    s = jnp.sign(jnp.diagonal(R, axis1=-2, axis2=-1))
+    s = jnp.where(s == 0, 1.0, s)
+    return Q * s[..., None, :], R * s[..., :, None]
+
+
+def decentralized_spectral_init(key: jax.Array, Xg: jax.Array, yg: jax.Array,
+                                W: jax.Array, *, kappa: float, mu: float,
+                                r: int, T_pm: int, T_con: int,
+                                broadcast: bool = True) -> SpectralInit:
+    """Xg: (L, tpn, n, d) node-major designs, yg: (L, tpn, n), W: (L, L)."""
+    L, tpn, n, d = Xg.shape
+    T = L * tpn
+    dtype = Xg.dtype
+
+    # --- lines 3-4: truncation threshold, gossiped ---------------------
+    alpha_in = 9.0 * kappa**2 * mu**2 * (L / (n * T)) * jnp.sum(
+        yg**2, axis=(1, 2))                                   # (L,)
+    alpha = agree(alpha_in, W, T_con)
+
+    # --- lines 5-7: truncated covariance columns ------------------------
+    mask = (yg**2 <= alpha[:, None, None]).astype(dtype)
+    y_trnc = yg * mask
+    # Θ_g^(0): (L, d, tpn); column t = (1/n) X_tᵀ y_t,trnc
+    Theta0 = jnp.einsum("gtnd,gtn->gdt", Xg, y_trnc) / n
+
+    # --- lines 8-9: common Gaussian start, QR ---------------------------
+    U_init = jax.random.normal(key, (d, r), dtype=dtype)      # same seed ∀g
+    U, _ = _qr_pos(U_init)
+    U = jnp.broadcast_to(U, (L, d, r))
+
+    # --- lines 10-13: decentralized orthogonal iteration ----------------
+    def pm_step(U, _):
+        V = jnp.einsum("gdt,get,ger->gdr", Theta0, Theta0, U)  # Θ_gΘ_gᵀU_g
+        V = agree(V, W, T_con)
+        Q, R = _qr_pos(V)
+        return Q, jnp.diagonal(R, axis1=-2, axis2=-1)
+
+    U, R_diags = jax.lax.scan(pm_step, U, None, length=T_pm)
+    R_diag = R_diags[-1]                                      # (L, r)
+
+    # --- lines 14-15: broadcast node 0's basis --------------------------
+    if broadcast:
+        U_bc = jnp.zeros_like(U).at[0].set(U[0])
+        U_bc = agree(U_bc, W, T_con)    # ≈ U_0 / L at every node
+        U, _ = _qr_pos(U_bc)
+
+    return SpectralInit(U0=U, R_diag=R_diag, alpha=alpha)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (
+    SyntheticLM, make_lm_batch, make_batch_for, node_task_loader,
+)

@@ -1,0 +1,14 @@
+from repro.distributed.graphs import (
+    Graph, erdos_renyi, ring, torus2d, hypercube, complete, star, path_graph,
+)
+from repro.distributed.mixing import (
+    metropolis_weights, equal_neighbor_weights, lazy_weights, gamma,
+    circulant_weights,
+)
+from repro.distributed.gossip import (
+    roll_gossip, shard_map_gossip, ring_weights, torus_shifts, axis_mean,
+)
+from repro.distributed.aggregation import (
+    AggregationConfig, aggregate_gradients, aggregate_params,
+    comm_bytes_per_step, STRATEGIES,
+)

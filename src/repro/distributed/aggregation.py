@@ -1,0 +1,140 @@
+"""Aggregation strategies — the paper's technique as a first-class feature
+of the deep-net trainer.
+
+Every strategy operates on pytrees whose leaves carry a leading **node
+axis** (n_nodes, ...).  In the production mesh that axis is sharded over
+'data' (single-pod: 16 nodes) or ('pod',) (multi-pod: pods-as-nodes, the
+setting where inter-node links — DCN — really are the expensive resource,
+exactly the paper's premise).  Gossip rounds lower to collective-permute
+chains; 'allreduce' lowers to one all-reduce (the fusion-center baseline).
+
+| strategy    | paper algorithm        | comm per step              |
+|-------------|------------------------|----------------------------|
+| allreduce   | AltGDmin [10]          | 1 all-reduce (exact mean)  |
+| consensus   | Dec-AltGDmin [9]       | T_con permutes of *grads*  |
+| diffusion   | Dif-AltGDmin (paper)   | T_con permutes of *params* |
+| dgd         | DGD-variant (Exp. 1)   | 1 permute of params        |
+| local       | no communication       | —                          |
+
+The *federated carve-out*: parameter groups matching ``local_patterns``
+(task heads, embeddings) are never communicated — they remain node-local,
+mirroring the paper's B_g that never leaves the node.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.gossip import roll_gossip
+
+STRATEGIES = ("allreduce", "diffusion", "consensus", "dgd", "local")
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationConfig:
+    strategy: str = "diffusion"
+    t_con: int = 1                   # gossip rounds per step
+    shifts: tuple = (-1, 1)          # ring topology by default
+    self_weight: float | None = None
+    local_patterns: tuple = ()       # param path regexes kept node-local
+    wire_dtype: str | None = None    # cast to this dtype for the exchange
+    #   (e.g. "bfloat16": halves gossip bytes; mixing still in f32 —
+    #   a beyond-paper §Perf knob)
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"choose from {STRATEGIES}")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _split_local(tree, patterns):
+    """Mask: True leaves are communicated, False stay local."""
+    if not patterns:
+        return jax.tree.map(lambda _: True, tree)
+    regs = [re.compile(p) for p in patterns]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: not any(r.search(_path_str(path)) for r in regs),
+        tree)
+
+
+def _mix(tree, mask, mix_fn, wire_dtype=None):
+    if wire_dtype is not None:
+        wd = jnp.dtype(wire_dtype)
+        send = jax.tree.map(lambda x: x.astype(wd), tree)
+        mixed = mix_fn(send)
+        mixed = jax.tree.map(lambda m, x: m.astype(x.dtype), mixed, tree)
+    else:
+        mixed = mix_fn(tree)
+    return jax.tree.map(lambda m, a, b: a if m else b, mask, mixed, tree)
+
+
+def _node_mean(tree):
+    """Exact mean over the node axis, broadcast back (→ all-reduce)."""
+    def mean(x):
+        acc_dt = jnp.promote_types(x.dtype, jnp.float32)
+        m = jnp.mean(x.astype(acc_dt), axis=0, keepdims=True)
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    return jax.tree.map(mean, tree)
+
+
+def aggregate_gradients(grads, agg: AggregationConfig):
+    """Pre-optimizer gradient communication (allreduce / consensus)."""
+    mask = _split_local(grads, agg.local_patterns)
+    if agg.strategy == "allreduce":
+        return _mix(grads, mask, _node_mean, agg.wire_dtype)
+    if agg.strategy == "consensus":
+        return _mix(grads, mask,
+                    lambda t: roll_gossip(t, agg.t_con, agg.shifts,
+                                          agg.self_weight),
+                    agg.wire_dtype)
+    return grads          # diffusion / dgd / local: no grad communication
+
+
+def aggregate_params(params, agg: AggregationConfig):
+    """Post-optimizer parameter communication (diffusion / dgd)."""
+    mask = _split_local(params, agg.local_patterns)
+    if agg.strategy == "diffusion":
+        return _mix(params, mask,
+                    lambda t: roll_gossip(t, agg.t_con, agg.shifts,
+                                          agg.self_weight),
+                    agg.wire_dtype)
+    if agg.strategy == "dgd":
+        # neighbour average EXCLUDING self (paper Experiment 1 formula)
+        return _mix(params, mask,
+                    lambda t: roll_gossip(t, 1, agg.shifts,
+                                          self_weight=0.0),
+                    agg.wire_dtype)
+    return params         # allreduce / consensus / local
+
+
+def pre_update(grads, agg: AggregationConfig):
+    return aggregate_gradients(grads, agg)
+
+
+def post_update(params, agg: AggregationConfig):
+    return aggregate_params(params, agg)
+
+
+def comm_bytes_per_step(n_params_communicated: int, itemsize: int,
+                        agg: AggregationConfig, n_nodes: int) -> int:
+    """Analytic per-step communication volume (for the benchmark tables):
+    bytes sent per node per step."""
+    if agg.strategy == "allreduce":
+        # ring all-reduce: 2·(L−1)/L · size
+        return int(2 * (n_nodes - 1) / n_nodes
+                   * n_params_communicated * itemsize)
+    if agg.strategy in ("diffusion", "consensus"):
+        return int(agg.t_con * len(agg.shifts)
+                   * n_params_communicated * itemsize)
+    if agg.strategy == "dgd":
+        return int(len(agg.shifts) * n_params_communicated * itemsize)
+    return 0

@@ -1,0 +1,105 @@
+"""Hardware gossip — the AGREE protocol on a TPU mesh.
+
+Two numerically-identical implementations of one circulant gossip round
+    Z_g ← w_self · Z_g + Σ_k w_k · Z_{g+s_k  (mod L)}
+(= ``Z ← W Z`` for the circulant W of repro.distributed.mixing):
+
+  * :func:`shard_map_gossip` — nodes are devices along a mesh axis; each
+    shift is ONE ``lax.ppermute`` (nearest-neighbour collective-permute on
+    the ICI torus).  This is the paper's communication pattern lowered to
+    TPU-native collectives; used by the linear-MTRL distributed runtime.
+  * :func:`roll_gossip` — nodes are the leading array axis; each shift is
+    a ``jnp.roll``.  Under pjit with that axis sharded over the mesh, XLA
+    lowers the roll to the same collective-permute — but the function
+    composes freely with vmap/grad/scan, so the deep-learning trainer
+    (repro.distributed.aggregation) uses this form.
+
+DESIGN.md §3 hardware adaptation: production topologies are rings/tori
+(fabric-native); arbitrary Erdős–Rényi graphs stay in the simulator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ring_weights(shifts: Sequence[int] = (-1, 1),
+                 self_weight: float | None = None):
+    """(self_weight, per-shift weight) for a symmetric circulant mixer.
+    Defaults to equal weights 1/(k+1) — the paper's equal-neighbour rule on
+    a regular ring."""
+    k = len(shifts)
+    sw = self_weight if self_weight is not None else 1.0 / (k + 1)
+    return sw, (1.0 - sw) / k
+
+
+def torus_shifts(rows: int, cols: int):
+    """Neighbour shifts of a rows×cols torus flattened row-major: ±1 (same
+    row, wrap handled by flat modular shift) and ±cols."""
+    return (-1, 1, -cols, cols)
+
+
+# ---------------------------------------------------------------- pjit form
+
+def roll_gossip(tree, T_con: int, shifts: Sequence[int] = (-1, 1),
+                self_weight: float | None = None):
+    """T_con gossip rounds over the leading (node) axis of every leaf."""
+    if T_con == 0:
+        return tree
+    sw, wn = ring_weights(shifts, self_weight)
+
+    def one_round(t):
+        def mix(x):
+            acc_dt = jnp.promote_types(x.dtype, jnp.float32)
+            acc = sw * x.astype(acc_dt)
+            for s in shifts:
+                acc = acc + wn * jnp.roll(x, -s, axis=0).astype(acc_dt)
+            return acc.astype(x.dtype)
+        return jax.tree.map(mix, t)
+
+    for _ in range(T_con):
+        tree = one_round(tree)
+    return tree
+
+
+# ---------------------------------------------------------- shard_map form
+
+def _ppermute_round(z, axis_name, L, shifts, sw, wn):
+    acc_dt = jnp.promote_types(z.dtype, jnp.float32)
+    acc = sw * z.astype(acc_dt)
+    for s in shifts:
+        perm = [(i, (i - s) % L) for i in range(L)]   # receive from i+s
+        acc = acc + wn * jax.lax.ppermute(z, axis_name, perm).astype(acc_dt)
+    return acc.astype(z.dtype)
+
+
+def shard_map_gossip(Z, mesh, axis_name: str, T_con: int,
+                     shifts: Sequence[int] = (-1, 1),
+                     self_weight: float | None = None):
+    """AGREE on hardware: Z's leading axis (length = mesh axis size) is
+    sharded over ``axis_name``; every round each device exchanges its block
+    with its ring neighbours via collective-permute."""
+    L = mesh.shape[axis_name]
+    if Z.shape[0] != L:
+        raise ValueError(f"leading axis {Z.shape[0]} != mesh axis {L}")
+    sw, wn = ring_weights(shifts, self_weight)
+    spec = jax.sharding.PartitionSpec(axis_name)
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=spec,
+                       out_specs=spec, axis_names={axis_name})
+    def run(z):
+        def body(carry, _):
+            return _ppermute_round(carry, axis_name, L, shifts, sw, wn), None
+        out, _ = jax.lax.scan(body, z, None, length=T_con)
+        return out
+
+    return run(Z)
+
+
+def axis_mean(tree, axis_name: str):
+    """Fusion-center baseline inside shard_map: exact pmean."""
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)

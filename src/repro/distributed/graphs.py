@@ -1,0 +1,138 @@
+"""Network topologies for the decentralized runtime.
+
+A :class:`Graph` is a plain adjacency-matrix wrapper (numpy, host side —
+topology is static metadata, never traced).  The paper's experiments use
+Erdős–Rényi graphs; the TPU runtime prefers ring/torus/hypercube because
+those embed in the ICI fabric with nearest-neighbour collective-permutes
+(DESIGN.md §3, hardware adaptation #1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph on L nodes. ``adj`` is a symmetric 0/1 matrix with
+    zero diagonal."""
+    adj: np.ndarray  # (L, L) int8
+
+    def __post_init__(self):
+        a = np.asarray(self.adj)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if not np.array_equal(a, a.T):
+            raise ValueError("adjacency must be symmetric (undirected graph)")
+        if np.any(np.diag(a) != 0):
+            raise ValueError("no self loops allowed")
+
+    @property
+    def n_nodes(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adj.sum(axis=1)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max())
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+    def neighbors(self, g: int) -> np.ndarray:
+        return np.nonzero(self.adj[g])[0]
+
+    def is_connected(self) -> bool:
+        L = self.n_nodes
+        seen = np.zeros(L, dtype=bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            u = stack.pop()
+            for v in np.nonzero(self.adj[u])[0]:
+                if not seen[v]:
+                    seen[v] = True
+                    stack.append(int(v))
+        return bool(seen.all())
+
+
+def erdos_renyi(L: int, p: float, seed: int = 0,
+                ensure_connected: bool = True, max_tries: int = 1000) -> Graph:
+    """G(L, p) as in the paper's simulations. If ``ensure_connected``,
+    resample until connected (the paper's Assumption 3), falling back to
+    adding a ring if p is too small to connect within ``max_tries``."""
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        u = rng.random((L, L))
+        upper = np.triu(np.ones((L, L), dtype=bool), 1)
+        a = ((u < p) & upper).astype(np.int8)
+        a = a + a.T
+        g = Graph(a)
+        if not ensure_connected or g.is_connected():
+            return g
+    # fall back: overlay a ring to force connectivity
+    a = a | ring(L).adj
+    return Graph(a.astype(np.int8))
+
+
+def ring(L: int) -> Graph:
+    a = np.zeros((L, L), dtype=np.int8)
+    if L == 1:
+        return Graph(a)
+    for i in range(L):
+        a[i, (i + 1) % L] = 1
+        a[(i + 1) % L, i] = 1
+    return Graph(a)
+
+
+def path_graph(L: int) -> Graph:
+    a = np.zeros((L, L), dtype=np.int8)
+    for i in range(L - 1):
+        a[i, i + 1] = 1
+        a[i + 1, i] = 1
+    return Graph(a)
+
+
+def torus2d(rows: int, cols: int) -> Graph:
+    """2-D torus — the natural embedding of a TPU ICI mesh slice."""
+    L = rows * cols
+    a = np.zeros((L, L), dtype=np.int8)
+
+    def idx(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            for j in (idx(r + 1, c), idx(r, c + 1)):
+                if i != j:
+                    a[i, j] = 1
+                    a[j, i] = 1
+    return Graph(a)
+
+
+def hypercube(dim: int) -> Graph:
+    L = 1 << dim
+    a = np.zeros((L, L), dtype=np.int8)
+    for i in range(L):
+        for b in range(dim):
+            j = i ^ (1 << b)
+            a[i, j] = 1
+    return Graph(a)
+
+
+def complete(L: int) -> Graph:
+    a = np.ones((L, L), dtype=np.int8) - np.eye(L, dtype=np.int8)
+    return Graph(a)
+
+
+def star(L: int) -> Graph:
+    a = np.zeros((L, L), dtype=np.int8)
+    a[0, 1:] = 1
+    a[1:, 0] = 1
+    return Graph(a)

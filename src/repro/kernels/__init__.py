@@ -1,0 +1,3 @@
+# TPU Pallas kernels (pl.pallas_call + BlockSpec) for the compute hot spots,
+# each with a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py.
+from repro.kernels import ops, ref

@@ -1,0 +1,142 @@
+"""AltGDmin least-squares Pallas kernel — the paper's own compute hot loop
+(Algorithm 3 lines 8 & 11), adapted for the MXU.
+
+Per outer iteration every node evaluates, for each local task t:
+    A_t = X_t U          (n×r tall-skinny),
+    G_t = A_tᵀA_t,  c_t = A_tᵀ y_t      (the normal equations),
+and, for the gradient, X_tᵀ(A_t b_t − y_t) b_tᵀ.  The d dimension (600 in
+the paper's experiments, arbitrary in production) is the long streamed
+axis: X_t tiles of (n, blk_d) and U tiles of (blk_d, r) stream through
+VMEM while the (n, r) A-tile accumulates in scratch.  Tasks ride the
+parallel grid dimension.  The tiny r×r Cholesky solve stays in jnp
+(ops.py) — it is not MXU work.
+
+Layouts: X (T, n, d); U (d, r); y (T, n) → G (T, r, r), c (T, r).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(x_ref, u_ref, y_ref, g_ref, c_ref, a_scr):
+    di = pl.program_id(1)
+    nd = pl.num_programs(1)
+
+    @pl.when(di == 0)
+    def _init():
+        a_scr[...] = jnp.zeros_like(a_scr)
+
+    x = x_ref[0].astype(jnp.float32)             # (n, blk_d)
+    u = u_ref[...].astype(jnp.float32)           # (blk_d, r)
+    a_scr[...] += jax.lax.dot_general(x, u, (((1,), (0,)), ((), ())))
+
+    @pl.when(di == nd - 1)
+    def _finalize():
+        a = a_scr[...]                           # (n, r)
+        y = y_ref[0].astype(jnp.float32)         # (n,)
+        g_ref[0] = jax.lax.dot_general(a, a, (((0,), (0,)), ((), ())))
+        c_ref[0] = jax.lax.dot_general(y[None, :], a,
+                                       (((1,), (0,)), ((), ())))[0]
+
+
+def task_gram(X, U, y, *, blk_d: int = 256, interpret: bool = True):
+    """X: (T,n,d); U: (d,r); y: (T,n) → (G (T,r,r), c (T,r)).
+    d must be a multiple of blk_d (ops.py pads)."""
+    T, n, d = X.shape
+    r = U.shape[1]
+    blk_d = min(blk_d, d)
+    assert d % blk_d == 0
+    grid = (T, d // blk_d)
+
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, blk_d), lambda t, i: (t, 0, i)),
+            pl.BlockSpec((blk_d, r), lambda t, i: (i, 0)),
+            pl.BlockSpec((1, n), lambda t, i: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, r, r), lambda t, i: (t, 0, 0)),
+            pl.BlockSpec((1, r), lambda t, i: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, r, r), jnp.float32),
+            jax.ShapeDtypeStruct((T, r), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, r), jnp.float32)],
+        interpret=interpret,
+    )(X, U, y)
+
+
+def _grad_kernel(x_ref, u_ref, b_ref, y_ref, g_ref, a_scr, r_scr, *,
+                 n: int):
+    """Two passes over d per task (grid dims: task, pass, d-tile):
+    pass 0 accumulates A = X U; pass 1 computes resid = A b − y once, then
+    accumulates the (blk_d, r) gradient tile X_tileᵀ resid bᵀ directly into
+    the output (gradient tiles are disjoint across d)."""
+    pi, di = pl.program_id(1), pl.program_id(2)
+    nd = pl.num_programs(2)
+
+    @pl.when((pi == 0) & (di == 0))
+    def _init():
+        a_scr[...] = jnp.zeros_like(a_scr)
+
+    @pl.when(pi == 0)
+    def _accum_a():
+        x = x_ref[0].astype(jnp.float32)
+        u = u_ref[...].astype(jnp.float32)
+        a_scr[...] += jax.lax.dot_general(x, u, (((1,), (0,)), ((), ())))
+
+    @pl.when((pi == 1) & (di == 0))
+    def _resid():
+        b = b_ref[0].astype(jnp.float32)             # (r,)
+        y = y_ref[0].astype(jnp.float32)             # (n,)
+        r_scr[...] = (jax.lax.dot_general(
+            a_scr[...], b[:, None], (((1,), (0,)), ((), ())))[:, 0]
+            - y)[:, None]                            # (n, 1)
+
+    @pl.when(pi == 1)
+    def _grad_tile():
+        x = x_ref[0].astype(jnp.float32)             # (n, blk_d)
+        b = b_ref[0].astype(jnp.float32)             # (r,)
+        xtres = jax.lax.dot_general(x, r_scr[...],
+                                    (((0,), (0,)), ((), ())))   # (blk_d,1)
+        g_ref[0] = jax.lax.dot_general(xtres, b[None, :],
+                                       (((1,), (0,)), ((), ())))
+
+
+def task_grad_tiles(X, U, B, y, *, blk_d: int = 256,
+                    interpret: bool = True):
+    """Per-task gradient contributions, d-tiled:
+    out (T, d, r) with out[t] = X_tᵀ(X_t U b_t − y_t) b_tᵀ.
+    Sum over T outside (ops.py) to get ∇f = Σ_t out[t]."""
+    T, n, d = X.shape
+    r = U.shape[1]
+    blk_d = min(blk_d, d)
+    assert d % blk_d == 0
+    grid = (T, 2, d // blk_d)
+
+    kernel = functools.partial(_grad_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, blk_d), lambda t, p, i: (t, 0, i)),
+            pl.BlockSpec((blk_d, r), lambda t, p, i: (i, 0)),
+            pl.BlockSpec((1, r), lambda t, p, i: (t, 0)),
+            pl.BlockSpec((1, n), lambda t, p, i: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_d, r), lambda t, p, i: (t, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d, r), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n, r), jnp.float32),      # A accumulator
+            pltpu.VMEM((n, 1), jnp.float32),      # residual
+        ],
+        interpret=interpret,
+    )(X, U, B, y)

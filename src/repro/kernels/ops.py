@@ -1,0 +1,140 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: compiled Pallas on TPU backends, interpret=True
+elsewhere (this container is CPU-only — interpret mode executes the
+kernel body in Python, validating the exact TPU code path numerically).
+Wrappers also handle padding to block multiples and layout conversion
+from the model's (B, S, H, D) convention to the kernels' (B, H, S, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import altgdmin_ls as _ls
+from repro.kernels import gossip_axpy as _ga
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag):
+    return (not _on_tpu()) if flag is None else flag
+
+
+# ------------------------------------------------------------ attention
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, blk_q=128,
+                    blk_k=128, interpret=None):
+    """Model layout: q (B,S,H,D); k,v (B,Skv,Hkv,D) → (B,S,H,D)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    qT = jnp.swapaxes(q, 1, 2)
+    kT = jnp.swapaxes(k, 1, 2)
+    vT = jnp.swapaxes(v, 1, 2)
+    blk_q_ = min(blk_q, Sq)
+    blk_k_ = min(blk_k, Skv)
+    pq = (-Sq) % blk_q_
+    pk = (-Skv) % blk_k_
+    if pq:
+        qT = jnp.pad(qT, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        # right-pad keys: padded slots sit above the causal diagonal of
+        # every real query (offset uses REAL lengths), so causal masking
+        # excludes them for free
+        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    o = _fa.flash_attention(qT, kT, vT, causal=causal, window=window,
+                            scale=D ** -0.5, blk_q=blk_q_, blk_k=blk_k_,
+                            offset=Skv - Sq,
+                            interpret=_interpret(interpret))
+    if pq:
+        o = o[:, :, :Sq]
+    return jnp.swapaxes(o, 1, 2)
+
+
+# ------------------------------------------------------------ SSD
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk=128, interpret=None):
+    """Model layout: x (B,S,H,P); dt (B,S,H); Bm/Cm (B,S,N) →
+    (y (B,S,H,P), h_final (B,H,P,N))."""
+    B, S, H, P = x.shape
+    chunk_ = min(chunk, S)
+    pad = (-S) % chunk_
+    xT = jnp.swapaxes(x, 1, 2)                       # (B,H,S,P)
+    dtT = jnp.swapaxes(dt, 1, 2)                     # (B,H,S)
+    if pad:
+        xT = jnp.pad(xT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dtT = jnp.pad(dtT, ((0, 0), (0, 0), (0, pad)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, h = _ssd.ssd_scan(xT, dtT, A, Bm, Cm, D, chunk=chunk_,
+                         interpret=_interpret(interpret))
+    y = jnp.swapaxes(y[:, :, :S], 1, 2)
+    return y, h
+
+
+# ------------------------------------------------------------ MTRL LS
+
+@functools.partial(jax.jit, static_argnames=("blk_d", "interpret"))
+def altgdmin_minimize_B(X, U, y, *, blk_d=256, interpret=None):
+    """b_t = (X_t U)† y_t via kernel Gram + tiny jnp Cholesky solve.
+    X: (T,n,d); U: (d,r); y: (T,n) → B (T,r)."""
+    d = X.shape[2]
+    blk = min(blk_d, d)
+    pad = (-d) % blk
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, 0), (0, pad)))
+        U = jnp.pad(U, ((0, pad), (0, 0)))
+    G, c = _ls.task_gram(X, U, y, blk_d=blk,
+                         interpret=_interpret(interpret))
+    return jax.vmap(lambda g, ci: jax.scipy.linalg.solve(
+        g, ci, assume_a="pos"))(G, c)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_d", "interpret"))
+def altgdmin_gradient(X, U, B, y, *, blk_d=256, interpret=None):
+    """∇_U f = Σ_t X_tᵀ(X_t U b_t − y_t) b_tᵀ via the fused two-pass
+    kernel. X: (T,n,d); U: (d,r); B: (T,r); y: (T,n) → (d,r)."""
+    d = X.shape[2]
+    blk = min(blk_d, d)
+    pad = (-d) % blk
+    Xp, Up = X, U
+    if pad:
+        Xp = jnp.pad(X, ((0, 0), (0, 0), (0, pad)))
+        Up = jnp.pad(U, ((0, pad), (0, 0)))
+    tiles = _ls.task_grad_tiles(Xp, Up, B, y, blk_d=blk,
+                                interpret=_interpret(interpret))
+    return jnp.sum(tiles, axis=0)[:d]
+
+
+# ------------------------------------------------------------ gossip
+
+@functools.partial(jax.jit, static_argnames=("w_self", "w_nbr",
+                                             "interpret"))
+def gossip_combine(z, neighbors, w_self, w_nbr, *, interpret=None):
+    """Fused z ← w_self·z + w_nbr·Σ neighbors over arbitrary-shape z."""
+    shape = z.shape
+    flat = z.reshape(-1)
+    n = flat.shape[0]
+    C, R = 256, 8                 # lane width × row tile
+    pad = (-n) % (C * R)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    nbr = neighbors.reshape(neighbors.shape[0], -1)
+    if pad:
+        nbr = jnp.pad(nbr, ((0, 0), (0, pad)))
+    M = flat.shape[0] // C
+    out = _ga.gossip_combine(flat.reshape(M, C),
+                             nbr.reshape(neighbors.shape[0], M, C),
+                             w_self, w_nbr, blk_rows=R,
+                             interpret=_interpret(interpret))
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps).  Deliberately naive — clarity over
+speed."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,H,Sq,D), k/v: (B,Hkv,Skv,D) → (B,H,Sq,D). GQA by head
+    grouping; f32 softmax."""
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Sq, D) * scale
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= ki <= qi + (Skv - Sq)       # aligned ends (prefill/decode)
+    if window is not None:
+        mask &= (qi + (Skv - Sq) - ki) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def ref_ssd(x, dt, A, Bm, Cm, D, h0=None):
+    """Sequential (token-by-token) SSD recurrence — the ground truth the
+    chunked/kernel implementations must match.
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N); D: (H,)."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    h = (h0.astype(jnp.float32) if h0 is not None
+         else jnp.zeros((Bb, H, P, N), jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        a = jnp.exp(dt_t * A)                              # (B,H)
+        h = (a[..., None, None] * h
+             + jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t))
+        y = jnp.einsum("bn,bhpn->bhp", C_t, h)
+        return h, y
+
+    h_fin, ys = jax.lax.scan(
+        step, h,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[:, None]
+    return y.astype(x.dtype), h_fin
+
+
+def ref_task_gram(X, U, y):
+    """The paper's per-task least-squares pieces, batched over tasks:
+    A_t = X_t U;  G_t = A_tᵀA_t;  c_t = A_tᵀ y_t.
+    X: (T,n,d), U: (d,r), y: (T,n) → G: (T,r,r), c: (T,r)."""
+    A = jnp.einsum("tnd,dr->tnr", X.astype(jnp.float32),
+                   U.astype(jnp.float32))
+    G = jnp.einsum("tnr,tns->trs", A, A)
+    c = jnp.einsum("tnr,tn->tr", A, y.astype(jnp.float32))
+    return G, c
+
+
+def ref_altgdmin_grad(X, U, B, y):
+    """∇_U f = Σ_t X_tᵀ (X_t U b_t − y_t) b_tᵀ.
+    X: (T,n,d), U: (d,r), B: (T,r), y: (T,n) → (d,r)."""
+    resid = (jnp.einsum("tnd,dr,tr->tn", X.astype(jnp.float32),
+                        U.astype(jnp.float32), B.astype(jnp.float32))
+             - y.astype(jnp.float32))
+    return jnp.einsum("tnd,tn,tr->dr", X.astype(jnp.float32), resid,
+                      B.astype(jnp.float32))
+
+
+def ref_gossip_combine(z, neighbors, w_self, w_nbr):
+    """z ← w_self·z + w_nbr·Σ_k neighbors[k].  z: (..., ), neighbors:
+    (K, ...)."""
+    return (w_self * z.astype(jnp.float32)
+            + w_nbr * jnp.sum(neighbors.astype(jnp.float32), axis=0)
+            ).astype(z.dtype)

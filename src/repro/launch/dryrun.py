@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) combination against 512 placeholder CPU devices and record
+memory/cost/collective analyses for the roofline tables.
+
+MUST be run as its own process (the device-count fake above precedes every
+other import — jax locks the device count on first init).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config                 # noqa: E402
+from repro.launch.mesh import (                                # noqa: E402
+    make_production_mesh, n_chips, PEAK_FLOPS_BF16, HBM_BW, ICI_BW,
+)
+from repro.launch.shapes import SHAPES                         # noqa: E402
+from repro.launch.specs import input_specs                     # noqa: E402
+from repro.utils.hlo import collective_stats, dominant_collective  # noqa: E402
+
+
+def calib_depths(cfg):
+    """(a, b): two reduced depths whose cost DIFFERENCE isolates one bulk
+    layer (zamba: one 6-layer group incl. the shared-attn application)."""
+    if cfg.block_pattern == "zamba":
+        p = cfg.shared_attn_period
+        return p, 2 * p
+    if cfg.n_experts and cfg.first_dense_layers:
+        return 2, 3        # 1 dense + {1,2} moe layers
+    return 1, 2
+
+
+def calib_seqs(cfg, shape):
+    """Three reduced sequence lengths (decode: cache capacities) at which
+    the calibration lowers are cheap: short enough that unrolled
+    attention/SSD chunk loops stay tiny, long enough to fit vlm patch
+    budgets and resolve the quadratic attention term."""
+    if cfg.modality == "vlm" and shape.kind != "decode":
+        v = cfg.vis_tokens
+        return (v + 256, v + 512, v + 768)
+    return (512, 768, 1024)
+
+
+def calib_target_seq(cfg, shape):
+    """Sequence value the fit is evaluated at: the real seq_len, except
+    decode shapes where cost scales with the CACHE CAPACITY (for
+    long_500k that's the sliding window of the lowered variant)."""
+    from repro.launch.shapes import cache_capacity, long_ctx_variant
+    if shape.kind == "decode":
+        vcfg = (long_ctx_variant(cfg)[0] if shape.name == "long_500k"
+                else cfg)
+        return cache_capacity(vcfg, shape)
+    return shape.seq_len
+
+
+def calibrate(cfg, shape, mesh, **kw):
+    """Calibrated (flops, hbm_bytes, collective_bytes).
+
+    XLA's cost_analysis counts a lax.scan body ONCE, not × trip count, so
+    a full-depth/full-seq lowering under-reports all three metrics.  We
+    exploit the EXACT polynomial structure of the cost:
+        m(L, S) = base(S) + L · layer(S),
+    with base linear in S (embedding/head/optimizer) and layer at most
+    quadratic in S (causal attention; SSD/MoE/decode are linear).  Six
+    cheap lowerings — two depths (calib_depths) × three short sequences
+    (calib_seqs), all with cfg.unroll=True so nothing hides in a scan —
+    determine layer(S_i) by depth-differencing, a quadratic fit gives
+    layer(S), a linear fit gives base(S), and the result is evaluated at
+    (n_layers, target_seq).
+    """
+    import dataclasses as _dc
+    import numpy as _np
+    a, b = calib_depths(cfg)
+    seqs = calib_seqs(cfg, shape)
+    target = calib_target_seq(cfg, shape)
+    ms = {}
+    for depth in (a, b):
+        for sq in seqs:
+            sh = _dc.replace(shape, seq_len=sq)
+            ms[(depth, sq)] = _np.array(
+                _measure(_calib_cfg(cfg, depth), sh, mesh, **kw))
+    S = _np.array(seqs, dtype=float)
+    layer_pts = _np.stack([(ms[(b, s)] - ms[(a, s)]) / (b - a)
+                           for s in seqs])              # (3, 3 metrics)
+    base_pts = _np.stack([ms[(a, s)] - a * layer_pts[i]
+                          for i, s in enumerate(seqs)])
+    out = []
+    for j in range(3):                                   # per metric
+        qc = _np.polyfit(S, layer_pts[:, j], 2)          # layer: quadratic
+        lc = _np.polyfit(S, base_pts[:, j], 1)           # base: linear
+        layer_t = _np.polyval(qc, target)
+        base_t = _np.polyval(lc, target)
+        out.append(float(max(base_t + cfg.n_layers * layer_t, 0.0)))
+    return tuple(out)
+
+
+def _calib_cfg(cfg, depth: int):
+    import dataclasses as _dc
+    fd = min(cfg.first_dense_layers, 1)
+    return _dc.replace(cfg, n_layers=depth, unroll=True,
+                       first_dense_layers=fd)
+
+
+def _measure(arch_cfg, shape_name, mesh, aggregation, t_con, fused,
+             **variant):
+    """Lower+compile one spec; return (flops, hbm_bytes, coll_bytes)."""
+    spec = input_specs(arch_cfg, shape_name, mesh, aggregation=aggregation,
+                       t_con=t_con, fused=fused, **variant)
+    with mesh:
+        compiled = jax.jit(
+            spec.step_fn,
+            in_shardings=spec.in_shardings).lower(*spec.args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]))
+
+
+def roofline_terms(flops_per_dev, hbm_bytes_per_dev, coll_bytes_per_dev):
+    """The three roofline terms, in seconds (per device ≡ per chip, since
+    the SPMD program is per-device)."""
+    return {
+        "compute_s": flops_per_dev / PEAK_FLOPS_BF16,
+        "memory_s": hbm_bytes_per_dev / HBM_BW,
+        "collective_s": coll_bytes_per_dev / ICI_BW,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense, train) / 6·N_active·D; 2·N·D for pure
+    forward (prefill), 2·N_active per decoded token."""
+    n_act = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_act * tokens
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            aggregation: str = "diffusion", t_con: int = 1,
+            fused: bool = True, calibrate_cost: bool | None = None,
+            **variant) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    spec = input_specs(cfg, shape_name, mesh, aggregation=aggregation,
+                       t_con=t_con, fused=fused, **variant)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips(mesh), "kind": spec.kind,
+        "aggregation": aggregation if spec.kind == "train" else None,
+        "t_con": t_con if spec.kind == "train" else None,
+        "variant": {k: v for k, v in variant.items() if v},
+        "note": spec.note, "status": "ok",
+    }
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(spec.step_fn,
+                          in_shardings=spec.in_shardings).lower(*spec.args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                          (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "output_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0))),
+    }
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    rec["cost"] = {"flops": flops, "bytes_accessed": hbm_bytes}
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    rec["collectives"] = coll
+    rec["dominant_collective"] = dominant_collective(coll)
+    rec["cost_raw"] = {"flops": flops, "bytes_accessed": hbm_bytes,
+                       "collective_bytes": coll["total_bytes"],
+                       "caveat": "lax.scan bodies counted once by XLA — "
+                                 "see cost (calibrated)"}
+
+    # ---- calibrated cost: 2 depths × 3 short seqs, polynomial fit.
+    # The roofline table is single-pod only (the multi-pod pass just
+    # proves the 'pod' axis shards), so calibration defaults off there.
+    if calibrate_cost is None:
+        calibrate_cost = not multi_pod
+    if not calibrate_cost:
+        rec["cost"] = dict(rec["cost_raw"],
+                           caveat="multi-pod: raw (uncalibrated) cost — "
+                                  "roofline uses the single-pod record")
+        flops = rec["cost"]["flops"]
+        hbm_bytes = rec["cost"]["bytes_accessed"]
+        coll_bytes = rec["cost"]["collective_bytes"]
+    else:
+        kw = dict(aggregation=aggregation, t_con=t_con, fused=fused,
+                  **variant)
+        t2 = time.time()
+        flops, hbm_bytes, coll_bytes = calibrate(cfg, shape, mesh, **kw)
+        rec["calibrate_s"] = round(time.time() - t2, 2)
+        rec["cost"] = {"flops": flops, "bytes_accessed": hbm_bytes,
+                       "collective_bytes": coll_bytes,
+                       "calib_depths": list(calib_depths(cfg)),
+                       "calib_seqs": list(calib_seqs(cfg, shape)),
+                       "calib_target_seq": calib_target_seq(cfg, shape)}
+
+    terms = roofline_terms(flops, hbm_bytes, coll_bytes)
+    dom = max(terms, key=terms.get)
+    mf = model_flops(spec.cfg, shape)
+    hlo_total_flops = flops * n_chips(mesh)
+    rec["roofline"] = {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops_total": mf,
+        "hlo_flops_total": hlo_total_flops,
+        "useful_flops_ratio": (mf / hlo_total_flops
+                               if hlo_total_flops else None),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--aggregation", default="diffusion")
+    ap.add_argument("--t-con", type=int, default=1)
+    ap.add_argument("--no-fused", action="store_true")
+    ap.add_argument("--wire-dtype", default=None)
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--shard-cache-slots", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shape_names = (list(SHAPES) if args.shape == "all"
+                   else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for sname in shape_names:
+            for multi in meshes:
+                mesh_tag = "2x16x16" if multi else "16x16"
+                tag = f"{arch}_{sname}_{mesh_tag}"
+                if args.tag:
+                    tag += f"_{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    try:
+                        with open(path) as f:
+                            if json.load(f).get("status") == "ok":
+                                print(f"{tag}: skip (exists)", flush=True)
+                                continue
+                    except Exception:
+                        pass
+                try:
+                    rec = run_one(arch, sname, multi,
+                                  aggregation=args.aggregation,
+                                  t_con=args.t_con,
+                                  fused=not args.no_fused,
+                                  wire_dtype=args.wire_dtype,
+                                  remat_policy=args.remat_policy,
+                                  shard_cache_slots=args.shard_cache_slots)
+                except Exception as e:              # record, keep going
+                    failures += 1
+                    rec = {"arch": arch, "shape": sname, "mesh": mesh_tag,
+                           "status": "FAILED", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec.get("roofline", {})
+                print(f"{tag}: {rec['status']}"
+                      + (f" dom={r.get('dominant')}"
+                         f" compute={r.get('compute_s', 0):.2e}s"
+                         f" mem={r.get('memory_s', 0):.2e}s"
+                         f" coll={r.get('collective_s', 0):.2e}s"
+                         f" lower={rec.get('lower_s')}s"
+                         f" compile={rec.get('compile_s')}s"
+                         if rec["status"] == "ok" else ""),
+                      flush=True)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

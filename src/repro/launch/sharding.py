@@ -1,0 +1,191 @@
+"""Sharding rules: Megatron-style tensor parallelism over the 'model' axis
++ the decentralized node axis over ('pod','data') for training.
+
+Parameter leaves are classified by their tree path:
+  column-parallel (output dim on 'model'): wq wk wv wuq wuk wuv gate up
+      in_proj lm_head
+  row-parallel (input dim on 'model'):     wo down out_proj
+  expert-parallel (expert dim on 'model'): experts/{gate,up,down}
+  vocab-sharded:                           embed table
+  replicated:                              norms, biases, router, conv,
+                                           A_log, dt_bias, D
+
+Leaves may carry leading [node] and/or [layer-stack] axes before the
+matrix dims; rules always address the TRAILING dims, so they compose with
+scan-stacking and the node axis transparently.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+COL_PAT = re.compile(
+    r"(wq|wk|wv|wuq|wuk|wuv|wdq|wdkv|in_proj|lm_head|gate|up)(/w)?$")
+ROW_PAT = re.compile(r"(wo|down|out_proj)(/w)?$")
+EMBED_PAT = re.compile(r"embed/table$")
+EXPERT_PAT = re.compile(r"experts/(gate|up|down)$")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _pad_spec(leaf_ndim: int, trailing: tuple, lead) -> P:
+    """Build a spec: [lead] on axis 0 (or None), None-padding, then the
+    trailing entries on the last len(trailing) dims."""
+    spec = [None] * leaf_ndim
+    if lead is not None and leaf_ndim > 0:
+        spec[0] = lead
+    for i, s in enumerate(trailing):
+        idx = leaf_ndim - len(trailing) + i
+        if idx == 0 and lead is not None:
+            continue            # never double-assign dim 0
+        if s is not None:
+            spec[idx] = s
+    return P(*spec)
+
+
+def param_spec_for(path: str, shape: tuple, model_size: int,
+                   lead=None) -> P:
+    """lead: mesh axes for the node dimension (dim 0), or None (serving).
+
+    Divisibility-aware: a rule only fires if the target dim divides evenly
+    by the 'model' axis size; otherwise it falls back (col → row →
+    replicate).  E.g. mamba2's in_proj output (2·d_inner+2N+H) is never a
+    multiple of 16, so it shards its INPUT dim (row-parallel) instead.
+    """
+    ndim = len(shape)
+
+    def div(dim_from_end: int) -> bool:
+        idx = ndim - dim_from_end
+        return idx >= 0 and shape[idx] % model_size == 0
+
+    if EXPERT_PAT.search(path):
+        if div(3):                   # experts (E, d, ff): E on 'model'
+            return _pad_spec(ndim, ("model", None, None), lead)
+        return _pad_spec(ndim, (), lead)
+    if EMBED_PAT.search(path):
+        if div(2):                   # vocab-sharded
+            return _pad_spec(ndim, ("model", None), lead)
+        if div(1):                   # fallback: shard d_model
+            return _pad_spec(ndim, (None, "model"), lead)
+        return _pad_spec(ndim, (), lead)
+    if COL_PAT.search(path):
+        if div(1):
+            return _pad_spec(ndim, (None, "model"), lead)
+        if div(2):                   # fallback row-parallel
+            return _pad_spec(ndim, ("model", None), lead)
+        return _pad_spec(ndim, (), lead)
+    if ROW_PAT.search(path):
+        if div(2):
+            return _pad_spec(ndim, ("model", None), lead)
+        if div(1):
+            return _pad_spec(ndim, (None, "model"), lead)
+        return _pad_spec(ndim, (), lead)
+    return _pad_spec(ndim, (), lead)
+
+
+def _add_fsdp(spec: P, shape: tuple, fsdp_axes: tuple, fsdp_size: int) -> P:
+    """Serving FSDP: fill ONE unsharded trailing matrix dim (≥2 dims from
+    the end count as matrix dims) with the data axes, largest first —
+    weights then shard over the whole mesh, which is the only layout in
+    which the big archs fit HBM."""
+    entries = list(spec)
+    entries += [None] * (len(shape) - len(entries))
+    cand = [i for i in range(max(len(shape) - 3, 0), len(shape))
+            if entries[i] is None and shape[i] % fsdp_size == 0
+            and shape[i] >= fsdp_size]
+    if cand:
+        i = max(cand, key=lambda j: shape[j])
+        entries[i] = (fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0])
+    return P(*entries)
+
+
+def param_specs(params, lead=None, model_size: int = 16, fsdp_axes=None,
+                fsdp_size: int = 16):
+    """PartitionSpec pytree matching ``params``.
+
+    ``lead``: node-axis mesh axes applied to dim 0 of every leaf (training
+    layout — each node holds its own replica, FSDP over 'model' only).
+    ``fsdp_axes``: serving layout — additionally shard one matrix dim of
+    every weight over the data axes (2-D weight sharding), so a 671B-param
+    model fits 256×16 GB HBM.  Rules address trailing dims, so scan-stack
+    axes pass through."""
+    lead_ = tuple(lead) if lead else None
+    fsdp = tuple(fsdp_axes) if fsdp_axes else None
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        s = param_spec_for(_path_str(path), shape, model_size, lead_)
+        if fsdp and leaf.ndim >= 2 and leaf.size >= 1 << 16:
+            s = _add_fsdp(s, shape, fsdp, fsdp_size)
+        return s
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_specs(batch, lead) -> dict:
+    """Batch pytree specs: leading (node/batch) dim over ``lead``."""
+    lead_ = tuple(lead) if lead else None
+
+    def spec(_, leaf):
+        return _pad_spec(leaf.ndim, (), lead_)
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(state, batch_axes, cfg, shard_heads: bool = True,
+                shard_slots: bool = False):
+    """Decode-state specs, built STRUCTURALLY from the decode plan (cache
+    pytrees are NamedTuples, so name-based rules don't apply).
+
+    Per cache class (after ``stack`` leading layer axes):
+      KVCache   k/v (…,B,cap,Hkv,Dh) → batch on data axes, heads on 'model'
+      MLACache  ckv/k_rope (…,B,cap,r) → batch only (per-token latent —
+                the point of MLA: nothing per-head to shard in the cache)
+      SSMCache  conv (…,B,K−1,ch) → batch; state (…,B,H,P,N) → batch +
+                heads on 'model'
+    """
+    from repro.models.transformer import build_plan, DecodeState
+    from repro.models.attention import KVCache, MLACache
+    from repro.models.ssm import SSMCache
+
+    lead = tuple(batch_axes) if batch_axes else None
+    # shard_slots: KV capacity dim over 'model' — the decode-memory
+    # hillclimb (a 77 GiB/dev 32k MHA cache becomes 4.8 GiB/dev);
+    # mutually exclusive with head sharding (same mesh axis)
+    slots = "model" if shard_slots else None
+    model = "model" if (shard_heads and not shard_slots) else None
+
+    def kv(extra: int):
+        e = (None,) * extra
+        return KVCache(k=P(*e, lead, slots, model, None),
+                       v=P(*e, lead, slots, model, None),
+                       positions=P(*e, lead, slots))
+
+    def mla(extra: int):
+        e = (None,) * extra
+        return MLACache(ckv=P(*e, lead, slots, None),
+                        k_rope=P(*e, lead, slots, None),
+                        positions=P(*e, lead, slots))
+
+    def ssm(extra: int):
+        e = (None,) * extra
+        return SSMCache(conv=P(*e, lead, None, None),
+                        state=P(*e, lead, model, None, None))
+
+    def seg_spec(kind, extra):
+        mixer, _ = kind
+        if mixer == "attn":
+            return mla(extra) if cfg.attn_impl == "mla" else kv(extra)
+        return ssm(extra)
+
+    caches, shared = [], None
+    for seg in build_plan(cfg):
+        if seg[0] == "scan":
+            caches.append(seg_spec(seg[1], extra=1))
+        else:
+            caches.append(ssm(extra=2))            # (n_groups, period, …)
+            shared = kv(extra=1)                   # (n_groups, …)
+    return DecodeState(caches=caches, shared_caches=shared, pos=P())

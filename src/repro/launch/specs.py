@@ -1,0 +1,186 @@
+"""input_specs — ShapeDtypeStruct stand-ins + shardings for every
+(arch × input-shape × mesh) combination; no device memory is ever
+allocated (the dry-run lowers against these).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.launch import shapes as shapes_lib
+from repro.launch import sharding as shard_lib
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tfm
+from repro.optim import adamw, warmup_cosine
+from repro.distributed.aggregation import AggregationConfig
+
+
+class DryRunSpec(NamedTuple):
+    step_fn: Any              # callable to jit
+    args: tuple               # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    kind: str                 # train | prefill | decode
+    cfg: Any                  # (possibly variant) ModelConfig used
+    note: str
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def abstract_params(cfg, n_nodes: int | None = None):
+    """ShapeDtypeStructs of the parameter tree (optionally node-stacked),
+    via eval_shape — zero allocation."""
+    shapes = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg), jax.random.PRNGKey(0))
+    if n_nodes:
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((n_nodes,) + x.shape, x.dtype),
+            shapes)
+    return shapes
+
+
+def batch_struct(cfg, batch: int, seq: int, lead_nodes: int | None = None):
+    """Abstract input batch for one step (training adds labels)."""
+    def with_lead(shape):
+        return (lead_nodes,) + shape if lead_nodes else shape
+    if cfg.modality == "vlm":
+        s_text = seq - cfg.vis_tokens
+        b = {
+            "tokens": jax.ShapeDtypeStruct(with_lead((batch, s_text)),
+                                           jnp.int32),
+            "vis_embed": jax.ShapeDtypeStruct(
+                with_lead((batch, cfg.vis_tokens, cfg.d_model)),
+                jnp.dtype(cfg.dtype)),
+            "labels": jax.ShapeDtypeStruct(with_lead((batch, s_text)),
+                                           jnp.int32),
+        }
+    else:
+        b = {"tokens": jax.ShapeDtypeStruct(with_lead((batch, seq)),
+                                            jnp.int32),
+             "labels": jax.ShapeDtypeStruct(with_lead((batch, seq)),
+                                            jnp.int32)}
+    return b
+
+
+def make_optimizer(cfg):
+    return adamw(warmup_cosine(3e-4, 200, 10_000), weight_decay=0.1)
+
+
+def input_specs(arch_cfg, shape_name: str, mesh, *,
+                aggregation: str = "diffusion", t_con: int = 1,
+                fused: bool = True, wire_dtype: str | None = None,
+                remat_policy: str | None = None,
+                shard_cache_slots: bool = False) -> DryRunSpec:
+    """Assemble (step_fn, abstract args, shardings) for one combination.
+    The keyword knobs are the §Perf hillclimb variants.  ``shape_name``
+    may also be an InputShape instance (the cost calibration passes
+    seq-reduced variants)."""
+    shape = (shape_name if isinstance(shape_name, shapes_lib.InputShape)
+             else shapes_lib.get_shape(shape_name))
+    model_size = mesh.shape.get("model", 1)
+    note = ""
+    cfg = arch_cfg
+    if remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+
+    if shape.kind == "train":
+        n_nodes = mesh_lib.n_nodes(mesh)
+        lead = mesh_lib.node_axes(mesh)
+        assert shape.global_batch % n_nodes == 0
+        per_node = shape.global_batch // n_nodes
+        params = abstract_params(cfg, n_nodes)
+        opt = make_optimizer(cfg)
+        opt_state = jax.eval_shape(opt.init, params)
+        state = steps_lib.TrainState(
+            params=params, opt_state=opt_state,
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        batch = batch_struct(cfg, per_node, shape.seq_len,
+                             lead_nodes=n_nodes)
+        agg = AggregationConfig(strategy=aggregation, t_con=t_con,
+                                local_patterns=("embed", "lm_head"),
+                                wire_dtype=wire_dtype)
+        make = (steps_lib.make_train_step_fused if fused
+                else steps_lib.make_train_step)
+        step = make(cfg, opt, agg, n_nodes)
+        pspec = shard_lib.param_specs(params, lead=lead,
+                                      model_size=model_size)
+        ospec = shard_lib.param_specs(opt_state, lead=lead,
+                                      model_size=model_size)
+        state_spec = steps_lib.TrainState(params=pspec, opt_state=ospec,
+                                          step=P())
+        bspec = shard_lib.batch_specs(batch, lead)
+        return DryRunSpec(
+            step_fn=step, args=(state, batch),
+            in_shardings=(_shardings(state_spec, mesh),
+                          _shardings(bspec, mesh)),
+            kind="train", cfg=cfg, note=note)
+
+    # ---------------- serving: single param copy --------------------
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_batch_devs = 1
+    for a in batch_axes:
+        n_batch_devs *= mesh.shape[a]
+
+    if shape.name == "long_500k":
+        cfg, note = shapes_lib.long_ctx_variant(cfg)
+
+    params = abstract_params(cfg)
+    # serving weights are cast to the activation dtype (bf16): inference
+    # needs no f32 master copy, halving weight HBM
+    serve_dt = jnp.dtype(cfg.dtype)
+    params = jax.tree.map(
+        lambda x: (jax.ShapeDtypeStruct(x.shape, serve_dt)
+                   if jnp.issubdtype(x.dtype, jnp.floating) else x),
+        params)
+    # 2-D weight sharding ('model' × data axes): the only serving layout
+    # in which the 480B/671B archs fit 16 GB/chip HBM
+    pspec = shard_lib.param_specs(params, lead=None, model_size=model_size,
+                                  fsdp_axes=batch_axes,
+                                  fsdp_size=n_batch_devs)
+
+    if shape.kind == "prefill":
+        batch = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        del batch["labels"]
+        lead = batch_axes if shape.global_batch % n_batch_devs == 0 else None
+        bspec = shard_lib.batch_specs(batch, lead)
+        step = steps_lib.make_prefill_step(cfg)
+        return DryRunSpec(
+            step_fn=step, args=(params, batch),
+            in_shardings=(_shardings(pspec, mesh),
+                          _shardings(bspec, mesh)),
+            kind="prefill", cfg=cfg, note=note)
+
+    # decode
+    cap = shapes_lib.cache_capacity(cfg, shape)
+    state = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, batch=shape.global_batch, capacity=cap))
+    lead = batch_axes if shape.global_batch % n_batch_devs == 0 else None
+    if lead is None:
+        note = (note + " | " if note else "") + (
+            f"batch {shape.global_batch} < {n_batch_devs} node devices — "
+            "cache replicated over data axes, weights sharded on 'model'")
+    cspec = shard_lib.cache_specs(state, lead, cfg, shard_heads=False,
+                                  shard_slots=shard_cache_slots)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tspec = P(lead) if lead else P()
+    step = steps_lib.make_serve_step(cfg)
+    return DryRunSpec(
+        step_fn=step,
+        args=(params, state, tokens),
+        in_shardings=(_shardings(pspec, mesh),
+                      _shardings(cspec, mesh),
+                      NamedSharding(mesh, tspec)),
+        kind="decode", cfg=cfg, note=note)

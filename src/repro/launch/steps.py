@@ -1,0 +1,120 @@
+"""Step functions for the distributed trainer/server.
+
+Training layout (the paper's decentralized setting mapped to the mesh):
+every param/optimizer leaf carries a leading **node axis** of size
+n_nodes = Π mesh[pod, data].  Node g's replica trains on node g's batch
+shard; communication between replicas is the pluggable aggregation
+strategy (diffusion = the paper's Dif-AltGDmin pattern; allreduce = the
+fusion-center baseline; consensus = Dec-AltGDmin; dgd; local).  Within a
+node, tensor parallelism over 'model' is implicit via param shardings.
+
+Serving layout: ONE param copy (no node axis) — prefill is a full-sequence
+forward; decode is one token against a KV/SSM cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.distributed.aggregation import (
+    AggregationConfig, aggregate_gradients, aggregate_params,
+)
+from repro.optim.optimizers import apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def cross_entropy(logits, labels):
+    """Mean next-token NLL. logits: (B,S,V) f32; labels: (B,S_l) aligned to
+    the LAST S_l positions (vlm prepends vis tokens that carry no loss)."""
+    S_l = labels.shape[1]
+    lt = logits[:, -S_l:]
+    ls = jax.nn.log_softmax(lt, axis=-1)
+    nll = -jnp.take_along_axis(ls, labels[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, batch, cfg):
+    logits, aux = tfm.forward(params, batch, cfg)
+    return cross_entropy(logits, batch["labels"]) + aux
+
+
+# ----------------------------------------------------------------- train
+
+def replicate_for_nodes(tree, n_nodes: int):
+    """Stack n_nodes copies along a new leading axis (dim 0)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_nodes,) + x.shape), tree)
+
+
+def make_train_step(cfg, opt, agg: AggregationConfig, n_nodes: int):
+    """Returns step(state, batch) → (state, metrics).
+
+    batch leaves: (n_nodes, per_node_batch, ...).  Gradients are computed
+    per node (vmap over the node axis), then communicated per the
+    aggregation strategy; optimizer update is node-local (vmapped
+    elementwise); diffusion gossips the updated parameters.
+    """
+    grad_one = jax.grad(loss_fn, has_aux=False)
+
+    def step(state: TrainState, batch):
+        losses = jax.vmap(lambda p, b: loss_fn(p, b, cfg))(
+            state.params, batch)
+        grads = jax.vmap(lambda p, b: grad_one(p, b, cfg))(
+            state.params, batch)
+        grads = aggregate_gradients(grads, agg)            # consensus/AR
+        updates, opt_state = opt.update(grads, state.opt_state,
+                                        state.params)
+        params = apply_updates(state.params, updates)
+        params = aggregate_params(params, agg)             # diffusion/dgd
+        metrics = {"loss": jnp.mean(losses),
+                   "loss_per_node": losses}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return step
+
+
+def make_train_step_fused(cfg, opt, agg: AggregationConfig, n_nodes: int):
+    """value_and_grad fusion of :func:`make_train_step` (one backward pass
+    computes both loss and grads — the production variant; kept separate
+    so EXPERIMENTS.md §Perf can A/B the fusion)."""
+    vg = jax.value_and_grad(loss_fn)
+
+    def step(state: TrainState, batch):
+        losses, grads = jax.vmap(lambda p, b: vg(p, b, cfg))(
+            state.params, batch)
+        grads = aggregate_gradients(grads, agg)
+        updates, opt_state = opt.update(grads, state.opt_state,
+                                        state.params)
+        params = apply_updates(state.params, updates)
+        params = aggregate_params(params, agg)
+        return (TrainState(params, opt_state, state.step + 1),
+                {"loss": jnp.mean(losses), "loss_per_node": losses})
+
+    return step
+
+
+# ----------------------------------------------------------------- serve
+
+def make_prefill_step(cfg):
+    """Full-sequence forward; returns last-position logits (the sampler's
+    input) — (B, V)."""
+    def prefill(params, batch):
+        logits, _ = tfm.forward(params, batch, cfg)
+        return logits[:, -1]
+    return prefill
+
+
+def make_serve_step(cfg):
+    """ONE decode token: (params, state, tokens (B,1)) → (logits, state)."""
+    def serve(params, state, tokens):
+        return tfm.decode_step(params, state, tokens, cfg)
+    return serve

@@ -1,0 +1,113 @@
+"""Training launcher: decentralized-diffusion LM training on the local
+mesh (or the production mesh when run under real hardware / fake devices).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 50 --aggregation diffusion --nodes 4
+
+On this CPU container the smoke flag is mandatory for non-trivial archs;
+the full configs are exercised via dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.distributed.aggregation import AggregationConfig
+from repro.launch import steps as steps_lib
+from repro.models import init_params
+from repro.models.frontends import vlm_batch_stub
+from repro.optim import adamw, warmup_cosine
+from repro.checkpoint import save_checkpoint
+from repro.utils.log import get_logger
+
+log = get_logger("repro.train")
+
+
+def make_batch(cfg, key, n_nodes, per_node, seq):
+    if cfg.modality == "vlm":
+        b = vlm_batch_stub(key, n_nodes * per_node, seq, cfg)
+        b = jax.tree.map(
+            lambda x: x.reshape((n_nodes, per_node) + x.shape[1:]), b)
+    else:
+        toks = jax.random.randint(key, (n_nodes, per_node, seq), 0,
+                                  cfg.vocab_size, dtype=jnp.int32)
+        b = {"tokens": toks}
+    b["labels"] = jnp.roll(b["tokens"], -1, axis=-1)
+    return b
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50,
+          n_nodes: int = 4, per_node_batch: int = 2, seq: int = 64,
+          aggregation: str = "diffusion", t_con: int = 1,
+          lr: float = 3e-4, seed: int = 0, ckpt_dir: str | None = None,
+          use_markov_data: bool = True, log_every: int = 10):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    params = steps_lib.replicate_for_nodes(params, n_nodes)
+    opt = adamw(warmup_cosine(lr, max(steps // 10, 1), steps),
+                weight_decay=0.1)
+    opt_state = opt.init(params)
+    state = steps_lib.TrainState(params, opt_state,
+                                 jnp.zeros((), jnp.int32))
+    agg = AggregationConfig(strategy=aggregation, t_con=t_con,
+                            local_patterns=("embed", "lm_head"))
+    step_fn = jax.jit(steps_lib.make_train_step_fused(cfg, opt, agg,
+                                                      n_nodes))
+    ds = SyntheticLM(cfg.vocab_size, seq, n_nodes * per_node_batch,
+                     seed=seed)
+
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        if use_markov_data and cfg.modality != "vlm":
+            flat = ds.batch(i)
+            b = {"tokens": flat["tokens"].reshape(n_nodes, per_node_batch,
+                                                  seq)}
+            b["labels"] = jnp.roll(b["tokens"], -1, axis=-1)
+        else:
+            b = make_batch(cfg, jax.random.fold_in(key, i), n_nodes,
+                           per_node_batch, seq)
+        state, metrics = step_fn(state, b)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if i % log_every == 0 or i == steps - 1:
+            log.info("step %4d loss %.4f (%.2f s)", i, loss,
+                     time.time() - t0)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, state.params)
+        log.info("saved checkpoint to %s", ckpt_dir)
+    return state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--per-node-batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--aggregation", default="diffusion")
+    ap.add_argument("--t-con", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    _, history = train(args.arch, smoke=args.smoke, steps=args.steps,
+                       n_nodes=args.nodes,
+                       per_node_batch=args.per_node_batch, seq=args.seq,
+                       aggregation=args.aggregation, t_con=args.t_con,
+                       lr=args.lr, ckpt_dir=args.ckpt_dir)
+    print(f"final loss: {history[-1]:.4f} (from {history[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.transformer import (
+    init_params, forward, init_cache, decode_step, count_params,
+)

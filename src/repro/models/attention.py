@@ -1,0 +1,303 @@
+"""Attention mixers: GQA/MQA/MHA (+ RoPE, qk-norm, sliding window) and MLA
+(multi-head latent attention, DeepSeek-V3), with full-sequence (train /
+prefill) and KV-cache single-token (decode) paths.
+
+The softmax core has two jnp implementations:
+  * ``attention_core`` — materializes the score matrix (used for short S);
+  * ``chunked_attention`` — lax.scan over KV chunks with an online softmax
+    (flash-attention math in pure jnp).  This is the production path for
+    long sequences: activation memory is O(S·chunk), so dry-run
+    memory_analysis reflects a realistic footprint.  The Pallas TPU kernel
+    (repro.kernels.flash_attention) implements the same math with explicit
+    VMEM tiling; ops.py dispatches between them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    init_linear, linear, init_rms_norm, rms_norm, apply_rope,
+)
+
+NEG_INF = -1e30
+CHUNK_THRESHOLD = 2048      # use the chunked path above this KV length
+
+
+# ======================================================================
+# softmax cores
+# ======================================================================
+
+def _build_mask(q_pos, k_pos, window):
+    """(B, Sq, Skv) bool — causal, optionally sliding-window, k valid."""
+    m = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)
+    if window is not None:
+        m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    return m
+
+
+def attention_core(q, k, v, q_pos, k_pos, *, window=None, scale=None):
+    """Reference core.  q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D);
+    q_pos: (B,Sq) int32, k_pos: (B,Skv) int32 (−1 ⇒ invalid slot)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    mask = _build_mask(q_pos, k_pos, window)[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, window=None, scale=None,
+                      chunk=1024, unroll=False):
+    """Online-softmax attention, scanning KV in chunks (flash math).
+
+    Same signature/semantics as :func:`attention_core`; activation memory is
+    O(B·H·Sq·chunk) instead of O(B·H·Sq·Skv).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n = (Skv + pad) // chunk
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D)
+    # chunk-major layout for scan
+    kc = jnp.moveaxis(k.reshape(B, n, chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n, chunk, Hkv, D), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(B, n, chunk), 1, 0)
+
+    def body(carry, xs):
+        o, m, l = carry                            # (B,H,G,Sq,D), (B,H,G,Sq)
+        kci, vci, pci = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kci.astype(jnp.float32))
+        mask = _build_mask(q_pos, pci, window)[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = (o * alpha[..., None]
+                 + jnp.einsum("bhgqk,bkhd->bhgqd", p, vci.astype(jnp.float32)))
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    if unroll:       # cost-calibration mode: every chunk visible in HLO
+        carry = (o0, m0, l0)
+        for i in range(n):
+            carry, _ = body(carry, (kc[i], vc[i], pc[i]))
+        o, m, l = carry
+    else:
+        (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), (kc, vc, pc))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_dispatch(q, k, v, q_pos, k_pos, *, window=None, scale=None,
+                       unroll=False):
+    if k.shape[1] > CHUNK_THRESHOLD:
+        return chunked_attention(q, k, v, q_pos, k_pos, window=window,
+                                 scale=scale, unroll=unroll)
+    return attention_core(q, k, v, q_pos, k_pos, window=window, scale=scale)
+
+
+# ======================================================================
+# GQA (covers MHA / MQA / GQA; qk-norm; sliding window)
+# ======================================================================
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, capacity, Hkv, D)
+    v: jax.Array           # (B, capacity, Hkv, D)
+    positions: jax.Array   # (B, capacity) int32, −1 ⇒ empty slot
+
+
+def init_gqa(key, cfg):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"wq": init_linear(ks[0], d, H * Dh, dt, cfg.attn_bias),
+         "wk": init_linear(ks[1], d, Hkv * Dh, dt, cfg.attn_bias),
+         "wv": init_linear(ks[2], d, Hkv * Dh, dt, cfg.attn_bias),
+         "wo": init_linear(ks[3], H * Dh, d, dt, cfg.attn_bias)}
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(Dh, dt)
+        p["k_norm"] = init_rms_norm(Dh, dt)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = linear(p["wq"], x).reshape(B, S, H, Dh)
+    k = linear(p["wk"], x).reshape(B, S, Hkv, Dh)
+    v = linear(p["wv"], x).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg, positions):
+    """Full-sequence path (train / prefill). x: (B,S,d); positions: (B,S)."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    o = attention_dispatch(q, k, v, positions, positions,
+                           window=cfg.sliding_window, unroll=cfg.unroll)
+    return linear(p["wo"], o.reshape(x.shape[0], x.shape[1], -1))
+
+
+def gqa_init_cache(cfg, batch, capacity, dtype):
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    return KVCache(
+        k=jnp.zeros((batch, capacity, Hkv, Dh), dtype),
+        v=jnp.zeros((batch, capacity, Hkv, Dh), dtype),
+        positions=jnp.full((batch, capacity), -1, jnp.int32))
+
+
+def gqa_decode(p, x, cfg, cache: KVCache, pos):
+    """One-token decode. x: (B,1,d); pos: scalar int32 (current position).
+    The cache is a ring buffer of size ``capacity`` (= full seq for
+    decode_32k, = sliding window for long_500k)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    cap = cache.k.shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    k_all = jax.lax.dynamic_update_slice(cache.k, k, (z, slot, z, z))
+    v_all = jax.lax.dynamic_update_slice(cache.v, v, (z, slot, z, z))
+    pos_all = jax.lax.dynamic_update_slice(
+        cache.positions, positions, (z, slot))
+    o = attention_dispatch(q, k_all, v_all, positions, pos_all,
+                           window=cfg.sliding_window, unroll=cfg.unroll)
+    y = linear(p["wo"], o.reshape(B, 1, -1))
+    return y, KVCache(k_all, v_all, pos_all)
+
+
+# ======================================================================
+# MLA — multi-head latent attention (DeepSeek-V3)
+# ======================================================================
+
+class MLACache(NamedTuple):
+    ckv: jax.Array         # (B, capacity, kv_lora) compressed latent
+    k_rope: jax.Array      # (B, capacity, rope_dim) shared rope key
+    positions: jax.Array   # (B, capacity)
+
+
+def init_mla(key, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wdq": init_linear(ks[0], d, qr, dt),
+        "q_norm": init_rms_norm(qr, dt),
+        "wuq": init_linear(ks[1], qr, H * (dn + dr), dt),
+        "wdkv": init_linear(ks[2], d, kvr + dr, dt),
+        "kv_norm": init_rms_norm(kvr, dt),
+        "wuk": init_linear(ks[3], kvr, H * dn, dt),
+        "wuv": init_linear(ks[4], kvr, H * dv, dt),
+        "wo": init_linear(ks[5], H * dv, d, dt),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    cq = rms_norm(p["q_norm"], linear(p["wdq"], x), cfg.norm_eps)
+    q = linear(p["wuq"], cq).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    kvr, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dkv = linear(p["wdkv"], x)
+    ckv = rms_norm(p["kv_norm"], dkv[..., :kvr], cfg.norm_eps)
+    k_rope = dkv[..., kvr:][:, :, None]                 # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_forward(p, x, cfg, positions):
+    """Full-sequence MLA: expand latent to per-head K/V (prefill-style)."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, k_rope = _mla_latent(p, x, cfg, positions)
+    k_nope = linear(p["wuk"], ckv).reshape(B, S, H, dn)
+    v = linear(p["wuv"], ckv).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None],
+                                          (B, S, H, dr))], axis=-1)
+    # pad V up to the QK head dim so the shared cores apply, then slice
+    o = attention_dispatch(q, k,
+                           jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                       (0, dn + dr - dv))),
+                           positions, positions, window=cfg.sliding_window,
+                           scale=(dn + dr) ** -0.5, unroll=cfg.unroll)
+    o = o[..., :dv].reshape(B, S, H * dv)
+    return linear(p["wo"], o)
+
+
+def mla_init_cache(cfg, batch, capacity, dtype):
+    return MLACache(
+        ckv=jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, capacity, cfg.rope_head_dim), dtype),
+        positions=jnp.full((batch, capacity), -1, jnp.int32))
+
+
+def mla_decode(p, x, cfg, cache: MLACache, pos):
+    """Absorbed-matmul decode: scores against the latent cache directly —
+    never materializes per-head K/V for the 32k/500k cache (the reason MLA
+    exists)."""
+    B = x.shape[0]
+    H, dn, dr, dv = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim)
+    kvr = cfg.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)       # (B,1,H,dn/(dr))
+    ckv_t, k_rope_t = _mla_latent(p, x, cfg, positions) # (B,1,kvr),(B,1,dr)
+    cap = cache.ckv.shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    ckv = jax.lax.dynamic_update_slice(cache.ckv, ckv_t, (z, slot, z))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, k_rope_t,
+                                          (z, slot, z))
+    pos_all = jax.lax.dynamic_update_slice(cache.positions, positions,
+                                           (z, slot))
+    # absorb W_uk into q: q_lat (B,1,H,kvr)
+    wuk = p["wuk"]["w"].reshape(kvr, H, dn)
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bqhk,bsk->bhqs", q_lat, ckv.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    mask = _build_mask(positions, pos_all, cfg.sliding_window)[:, None]
+    s = jnp.where(mask, s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)                      # (B,H,1,S)
+    o_lat = jnp.einsum("bhqs,bsk->bqhk", a, ckv.astype(jnp.float32))
+    wuv = p["wuv"]["w"].reshape(kvr, H, dv)
+    o = jnp.einsum("bqhk,khv->bqhv", o_lat, wuv.astype(jnp.float32))
+    y = linear(p["wo"], o.reshape(B, 1, H * dv).astype(x.dtype))
+    return y, MLACache(ckv, k_rope, pos_all)

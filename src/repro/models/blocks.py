@@ -1,0 +1,143 @@
+"""Decoder blocks: (attn | mamba2) mixer + (dense SwiGLU | MoE) FFN with
+pre-norm residuals; command-r's parallel attn∥ffn variant; zamba's extra
+shared-attention residual.  Each block function returns (x, aux) where aux
+is the MoE load-balance loss contribution (0 for dense)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_rms_norm, rms_norm, init_swiglu, swiglu
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+# ----------------------------------------------------------------- init
+
+def init_block(key, cfg, kind):
+    """kind = (mixer, ffn) with mixer ∈ {attn, ssm},
+    ffn ∈ {dense, moe, none} ('none' ⇒ mixer-only block, mamba2 style)."""
+    mixer, ffn = kind
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"norm1": init_rms_norm(cfg.d_model, dt)}
+    if mixer == "attn":
+        p["mixer"] = (attn.init_mla(k1, cfg) if cfg.attn_impl == "mla"
+                      else attn.init_gqa(k1, cfg))
+    else:
+        p["mixer"] = ssm_mod.init_mamba2(k1, cfg)
+    if ffn == "none":
+        return p
+    if not cfg.parallel_block:
+        p["norm2"] = init_rms_norm(cfg.d_model, dt)
+    if ffn == "dense":
+        p["ffn"] = init_swiglu(k2, cfg.d_model, cfg.d_ff, dt, cfg.mlp_bias)
+    else:
+        p["ffn"] = moe_mod.init_moe(k2, cfg)
+    return p
+
+
+def init_shared_attn(key, cfg):
+    """Zamba2: ONE weight-tied attention+MLP block reused every
+    ``shared_attn_period`` layers (the backbone's d_ff belongs here)."""
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"norm": init_rms_norm(cfg.d_model, dt),
+            "attn": attn.init_gqa(k1, cfg),
+            "norm2": init_rms_norm(cfg.d_model, dt),
+            "ffn": init_swiglu(k2, cfg.d_model, cfg.d_ff, dt, cfg.mlp_bias)}
+
+
+# ----------------------------------------------------------------- fwd
+
+def _mixer_fwd(p, h, cfg, kind_mixer, positions):
+    if kind_mixer == "attn":
+        if cfg.attn_impl == "mla":
+            return attn.mla_forward(p["mixer"], h, cfg, positions)
+        return attn.gqa_forward(p["mixer"], h, cfg, positions)
+    return ssm_mod.mamba2_forward(p["mixer"], h, cfg)
+
+
+def _ffn_fwd(p, h, cfg, kind_ffn):
+    if kind_ffn == "dense":
+        return swiglu(p["ffn"], h), jnp.zeros((), jnp.float32)
+    return moe_mod.moe_forward(p["ffn"], h, cfg)
+
+
+def block_forward(p, x, cfg, kind, positions):
+    mixer, ffn = kind
+    if ffn == "none":
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        return x + _mixer_fwd(p, h, cfg, mixer, positions), jnp.zeros(
+            (), jnp.float32)
+    if cfg.parallel_block:
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        a = _mixer_fwd(p, h, cfg, mixer, positions)
+        f, aux = _ffn_fwd(p, h, cfg, ffn)
+        return x + a + f, aux
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    x = x + _mixer_fwd(p, h, cfg, mixer, positions)
+    h = rms_norm(p["norm2"], x, cfg.norm_eps)
+    f, aux = _ffn_fwd(p, h, cfg, ffn)
+    return x + f, aux
+
+
+def shared_attn_forward(p_shared, x, cfg, positions):
+    h = rms_norm(p_shared["norm"], x, cfg.norm_eps)
+    x = x + attn.gqa_forward(p_shared["attn"], h, cfg, positions)
+    h = rms_norm(p_shared["norm2"], x, cfg.norm_eps)
+    return x + swiglu(p_shared["ffn"], h)
+
+
+# ----------------------------------------------------------------- decode
+
+def block_init_cache(cfg, kind, batch, capacity, dtype):
+    mixer, _ = kind
+    if mixer == "attn":
+        if cfg.attn_impl == "mla":
+            return attn.mla_init_cache(cfg, batch, capacity, dtype)
+        return attn.gqa_init_cache(cfg, batch, capacity, dtype)
+    return ssm_mod.mamba2_init_cache(cfg, batch, dtype)
+
+
+def block_decode(p, x, cfg, kind, cache, pos):
+    mixer, ffn = kind
+    if ffn == "none":
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            a, cache = (attn.mla_decode(p["mixer"], h, cfg, cache, pos)
+                        if cfg.attn_impl == "mla"
+                        else attn.gqa_decode(p["mixer"], h, cfg, cache, pos))
+        else:
+            a, cache = ssm_mod.mamba2_decode(p["mixer"], h, cfg, cache)
+        return x + a, cache
+    if cfg.parallel_block:
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            a, cache = (attn.mla_decode(p["mixer"], h, cfg, cache, pos)
+                        if cfg.attn_impl == "mla"
+                        else attn.gqa_decode(p["mixer"], h, cfg, cache, pos))
+        else:
+            a, cache = ssm_mod.mamba2_decode(p["mixer"], h, cfg, cache)
+        f, aux = _ffn_fwd(p, h, cfg, ffn)
+        return x + a + f, cache
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        a, cache = (attn.mla_decode(p["mixer"], h, cfg, cache, pos)
+                    if cfg.attn_impl == "mla"
+                    else attn.gqa_decode(p["mixer"], h, cfg, cache, pos))
+    else:
+        a, cache = ssm_mod.mamba2_decode(p["mixer"], h, cfg, cache)
+    x = x + a
+    h = rms_norm(p["norm2"], x, cfg.norm_eps)
+    f, _ = _ffn_fwd(p, h, cfg, ffn)
+    return x + f, cache
+
+
+def shared_attn_decode(p_shared, x, cfg, cache, pos):
+    h = rms_norm(p_shared["norm"], x, cfg.norm_eps)
+    a, cache = attn.gqa_decode(p_shared["attn"], h, cfg, cache, pos)
+    x = x + a
+    h = rms_norm(p_shared["norm2"], x, cfg.norm_eps)
+    return x + swiglu(p_shared["ffn"], h), cache

@@ -1,0 +1,45 @@
+"""Modality frontends — STUBS per the assignment carve-out.
+
+The [audio] and [vlm] architectures specify the transformer backbone only;
+the codec / vision tower is not implemented.  These helpers produce the
+tensors a real frontend would emit, with the correct shapes/dtypes:
+
+  * musicgen: EnCodec is a neural audio codec whose output is a token
+    stream over a 2048-entry codebook — the backbone consumes token ids
+    directly, so the stub is simply a synthetic token generator;
+  * llava-next: the SigLIP/ViT tower + projector emit per-patch embeddings
+    of width d_model; anyres tiling is approximated by a fixed patch
+    budget ``cfg.vis_tokens`` per sample.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_token_stub(key, batch, seq_len, cfg):
+    """Synthetic EnCodec token ids (B, S) in [0, vocab)."""
+    return jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size,
+                              dtype=jnp.int32)
+
+
+def vision_embed_stub(key, batch, cfg, dtype=None):
+    """Synthetic pre-projected patch embeddings (B, vis_tokens, d_model) —
+    what the (stubbed) vision tower + projector would output."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    return (jax.random.normal(key, (batch, cfg.vis_tokens, cfg.d_model),
+                              jnp.float32) * 0.02).astype(dtype)
+
+
+def vlm_batch_stub(key, batch, seq_len, cfg):
+    """Full VLM input batch: vis_tokens patch embeddings + text tokens such
+    that the combined sequence length equals ``seq_len``."""
+    if cfg.vis_tokens >= seq_len:
+        raise ValueError(f"vis_tokens={cfg.vis_tokens} must be < seq_len")
+    k1, k2 = jax.random.split(key)
+    s_text = seq_len - cfg.vis_tokens
+    return {
+        "tokens": jax.random.randint(k1, (batch, s_text), 0, cfg.vocab_size,
+                                     dtype=jnp.int32),
+        "vis_embed": vision_embed_stub(k2, batch, cfg),
+    }

@@ -1,0 +1,93 @@
+"""Primitive layers shared by every architecture — pure-JAX (no flax):
+parameters are plain dicts of jnp arrays, layers are (params, x) -> y
+functions.  Initializers mirror common practice (trunc-normal fan-in).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def he_normal(key, shape, in_axis_size, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * (in_axis_size ** -0.5)).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False):
+    p = {"w": he_normal(key, (d_in, d_out), d_in, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    """Weights are stored in param_dtype (f32) and cast to the activation
+    dtype at use — activations stay in cfg.dtype (bf16) end to end."""
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rms_norm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps: float):
+    # compute in f32 for stability regardless of activation dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Tied logits: x @ tableᵀ (f32 accumulation for the softmax)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- SwiGLU
+
+def init_swiglu(key, d_model, d_ff, dtype, bias=False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": init_linear(k1, d_model, d_ff, dtype, bias),
+            "up": init_linear(k2, d_model, d_ff, dtype, bias),
+            "down": init_linear(k3, d_ff, d_model, dtype, bias)}
+
+
+def swiglu(p, x):
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x))
+                  * linear(p["up"], x))
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_frequencies(d_head: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the even half of the head dim (f32)."""
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh) with rotate-half convention; positions: (..., S).
+
+    Computed in f32 and cast back.
+    """
+    d_head = x.shape[-1]
+    inv = rope_frequencies(d_head, theta)                 # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv   # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,196 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) sequence mixer.
+
+Layer structure (Mamba2):
+  in_proj → [z | x | B | C | dt]; causal conv1d (width K) over [x|B|C];
+  SSD recurrence  h_t = exp(dt_t·A) h_{t-1} + dt_t · B_t ⊗ x_t,
+                  y_t = C_t·h_t + D·x_t        (A scalar per head);
+  gated RMSNorm  y ← norm(y · silu(z));  out_proj.
+
+The SSD is evaluated with the paper's chunked algorithm: within a chunk of
+Q tokens the recurrence is unrolled into a masked quadratic form (MXU
+work), across chunks a lax.scan carries the (H, P, N) state — so
+activation memory is O(S·Q), never O(S²).  ``repro.kernels.ssd_scan`` is
+the Pallas TPU version of the same math.
+
+Decode is the O(1)-per-token recurrent step on an SSMCache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import he_normal, init_linear, linear, init_rms_norm
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, K−1, conv_channels) rolling conv window
+    state: jax.Array   # (B, H, P, N) SSD state
+
+
+# ----------------------------------------------------------------- params
+
+def init_mamba2(key, cfg):
+    d, di, N, H, P = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    assert H * P == di, f"ssm_heads*headdim must equal d_inner ({H}·{P}≠{di})"
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_ch = di + 2 * N
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di + 2 * N + H, dt),
+        "conv_w": he_normal(ks[1], (cfg.ssm_conv, conv_ch), cfg.ssm_conv, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.geomspace(1e-3, 1e-1, H))).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rms_norm(di, dt),
+        "out_proj": init_linear(ks[2], di, d, dt),
+    }
+
+
+def _split_in_proj(p, x, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = linear(p["in_proj"], x)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_raw = zxbcdt[..., di + di + 2 * N:]
+    return z, xbc, dt_raw
+
+
+def _gated_out(p, y, z, cfg):
+    di = cfg.d_inner
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm"]["scale"].astype(jnp.float32)).astype(y.dtype)
+    return linear(p["out_proj"], g)
+
+
+# ----------------------------------------------------------------- SSD
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int, h0=None, unroll=False):
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,)
+    negative reals; Bm/Cm: (B,S,N); D: (H,).  Returns (y, h_final)."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+    Q = chunk
+
+    def cm(a):      # chunk-major (nc, B, Q, ...)
+        return jnp.moveaxis(a.reshape(Bb, nc, Q, *a.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = (cm(x.astype(jnp.float32)),
+                       cm(dt.astype(jnp.float32)),
+                       cm(Bm.astype(jnp.float32)),
+                       cm(Cm.astype(jnp.float32)))
+    A = A.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((Bb, H, P, N), jnp.float32))
+
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]                     # (Q, Q)
+
+    def body(h, xs):
+        xq, dtq, Bq, Cq = xs                                  # (B,Q,·)
+        dA = dtq * A                                          # (B,Q,H) ≤ 0
+        cum = jnp.cumsum(dA, axis=1)
+        seg = cum[:, -1]                                      # (B,H)
+        # intra-chunk quadratic form
+        L = jnp.where(causal[None, :, :, None],
+                      jnp.exp(cum[:, :, None] - cum[:, None, :]), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cq, Bq)           # (B,Q,Q)
+        M = scores[..., None] * L * dtq[:, None]              # (B,Q,Q,H)
+        y = jnp.einsum("bijh,bjhp->bihp", M, xq)
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("bin,bhpn->bihp", Cq, h) * jnp.exp(cum)[..., None]
+        # chunk state and carry update
+        decay = jnp.exp(seg[:, None] - cum) * dtq             # (B,Q,H)
+        S_c = jnp.einsum("bqh,bqn,bqhp->bhpn", decay, Bq, xq)
+        h = jnp.exp(seg)[..., None, None] * h + S_c
+        return h, y
+
+    if unroll:       # cost-calibration mode (see dryrun.py)
+        h_fin, ys = h_init, []
+        for i in range(nc):
+            h_fin, yi = body(h_fin, (xc[i], dtc[i], Bc[i], Cc[i]))
+            ys.append(yi)
+        yc = jnp.stack(ys)
+    else:
+        h_fin, yc = jax.lax.scan(body, h_init, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bb, S + pad, H, P)[:, :S]
+    y = y + x[:, :S].astype(jnp.float32) * D[:, None]
+    return y, h_fin
+
+
+def ssd_step(h, x_t, dt_t, A, B_t, C_t, D):
+    """One-token SSD update. h: (B,H,P,N); x_t: (B,H,P); dt_t: (B,H);
+    B_t/C_t: (B,N)."""
+    a = jnp.exp(dt_t * A)                                    # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32))
+    h = a[..., None, None] * h + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_t.astype(jnp.float32), h)
+    return h, y + x_t.astype(jnp.float32) * D[:, None]
+
+
+# ----------------------------------------------------------------- layer
+
+def mamba2_forward(p, x, cfg):
+    """Full-sequence Mamba2 mixer. x: (B,S,d) → (B,S,d)."""
+    B, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt_raw = _split_in_proj(p, x, cfg)
+    # causal depthwise conv via width-K shifted adds (K is tiny)
+    K = cfg.ssm_conv
+    conv = jnp.zeros(xbc.shape, jnp.float32)
+    xbc_f = xbc.astype(jnp.float32)
+    for i in range(K):
+        shift = K - 1 - i
+        rolled = jnp.pad(xbc_f, ((0, 0), (shift, 0), (0, 0)))[:, :S]
+        conv = conv + rolled * p["conv_w"][i].astype(jnp.float32)
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xin = xbc[..., :di].reshape(B, S, H, P)
+    Bm, Cm = xbc[..., di:di + N], xbc[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xin, dt, A, Bm, Cm, p["D"], cfg.ssm_chunk,
+                       unroll=cfg.unroll)
+    y = y.astype(x.dtype).reshape(B, S, di)
+    return _gated_out(p, y, z, cfg)
+
+
+def mamba2_init_cache(cfg, batch, dtype):
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32))
+
+
+def mamba2_decode(p, x, cfg, cache: SSMCache):
+    """One-token recurrent step. x: (B,1,d) → ((B,1,d), new cache)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt_raw = _split_in_proj(p, x[:, 0], cfg)         # (B, ·)
+    window = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)  # (B,K,ch)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(
+                          jnp.float32)
+    xbc_t = jax.nn.silu(conv).astype(x.dtype)
+    x_t = xbc_t[..., :di].reshape(B, H, P)
+    B_t, C_t = xbc_t[..., di:di + N], xbc_t[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h, y = ssd_step(cache.state, x_t, dt, A, B_t, C_t, p["D"])
+    y = _gated_out(p, y.astype(x.dtype).reshape(B, 1, di), z[:, None], cfg)
+    return y, SSMCache(conv=window[:, 1:], state=h)

@@ -1,0 +1,296 @@
+"""Decoder-only transformer assembly, generic over the architecture zoo.
+
+The layer stack is described by a *plan*: a list of segments, each a
+contiguous run of layers with identical block structure.  Every segment is
+executed as ONE ``lax.scan`` over stacked parameters, so compile time (and
+HLO size) stays flat in depth — essential when lowering 61–81-layer
+configs against 512 fake devices on one CPU core.
+
+Segments:
+  ("scan", kind, n)            — n identical (mixer, ffn) blocks;
+  ("zamba", n_groups, period)  — n_groups × [period ssm blocks + ONE
+                                 weight-tied shared-attention block]
+                                 (Zamba2; the shared block's weights live
+                                 once at the top level).
+
+Modality handling (stub frontends per DESIGN.md carve-out):
+  text / audio — token ids (B, S) through the embedding table (musicgen's
+  EnCodec codec is the stubbed frontend; its output IS the 2048-vocab
+  token stream);
+  vlm — pre-projected patch embeddings (B, S_vis, d) are concatenated in
+  front of the text token embeddings (anyres tiling ⇒ fixed vis budget).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    init_embedding, embed, unembed, init_linear, linear, init_rms_norm,
+    rms_norm,
+)
+from repro.models import blocks as blk
+
+
+# ----------------------------------------------------------------- plan
+
+def build_plan(cfg):
+    """Segment the layer stack into homogeneous scannable runs."""
+    if cfg.block_pattern == "zamba":
+        period = cfg.shared_attn_period
+        n_groups, rest = divmod(cfg.n_layers, period)
+        plan = []
+        if n_groups:
+            plan.append(("zamba", n_groups, period))
+        if rest:
+            plan.append(("scan", ("ssm", "none"), rest))
+        return plan
+    if cfg.block_pattern == "ssm":
+        return [("scan", ("ssm", "none"), cfg.n_layers)]
+    # attention backbones, possibly with leading dense layers before MoE
+    plan = []
+    k = min(cfg.first_dense_layers, cfg.n_layers) if cfg.n_experts else 0
+    if cfg.n_experts:
+        if k:
+            plan.append(("scan", ("attn", "dense"), k))
+        plan.append(("scan", ("attn", "moe"), cfg.n_layers - k))
+    else:
+        plan.append(("scan", ("attn", "dense"), cfg.n_layers))
+    return plan
+
+
+def _stack_init(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ----------------------------------------------------------------- params
+
+def init_params(key, cfg):
+    plan = build_plan(cfg)
+    ks = jax.random.split(key, len(plan) + 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_rms_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(ks[1], cfg.d_model, cfg.vocab_size,
+                                        dt)
+    if cfg.block_pattern == "zamba":
+        params["shared_attn"] = blk.init_shared_attn(ks[2], cfg)
+    for i, seg in enumerate(plan):
+        if seg[0] == "scan":
+            _, kind, n = seg
+            params[f"seg{i}"] = _stack_init(
+                ks[3 + i], n, lambda k: blk.init_block(k, cfg, kind))
+        else:
+            _, n_groups, period = seg
+
+            def group_init(k, period=period):
+                layers = [blk.init_block(kk, cfg, ("ssm", "none"))
+                          for kk in jax.random.split(k, period)]
+                return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+            params[f"seg{i}"] = _stack_init(ks[3 + i], n_groups, group_init)
+    return params
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ----------------------------------------------------------------- embed
+
+def embed_inputs(params, batch, cfg):
+    """batch: {"tokens": (B, S)} or vlm {"tokens": (B, S_text),
+    "vis_embed": (B, S_vis, d)} → (x, positions)."""
+    tok_x = embed(params["embed"], batch["tokens"]).astype(
+        jnp.dtype(cfg.dtype))
+    if cfg.modality == "vlm" and "vis_embed" in batch:
+        vis = batch["vis_embed"].astype(jnp.dtype(cfg.dtype))
+        x = jnp.concatenate([vis, tok_x], axis=1)
+    else:
+        x = tok_x
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+# ----------------------------------------------------------------- forward
+
+def forward(params, batch, cfg):
+    """Full-sequence forward → (logits (B,S,V), aux_loss scalar)."""
+    x, positions = embed_inputs(params, batch, cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    def run_scan(seg_params, x, aux, kind):
+        def body(carry, p_layer):
+            h, a = carry
+            h, da = blk.block_forward(p_layer, h, cfg, kind, positions)
+            return (h, a + da), None
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+        if cfg.unroll:       # cost-calibration mode (see launch/dryrun.py)
+            n = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
+            carry = (x, aux)
+            for i in range(n):
+                carry, _ = body(carry, jax.tree.map(lambda q: q[i],
+                                                    seg_params))
+            return carry
+        (x, aux), _ = jax.lax.scan(body, (x, aux), seg_params)
+        return x, aux
+
+    def run_zamba(seg_params, x, aux, period):
+        shared = params["shared_attn"]
+
+        def body(carry, p_group):
+            h, a = carry
+            for j in range(period):
+                p_layer = jax.tree.map(lambda q: q[j], p_group)
+                h, da = blk.block_forward(p_layer, h, cfg, ("ssm", "none"),
+                                          positions)
+                a = a + da
+            h = blk.shared_attn_forward(shared, h, cfg, positions)
+            return (h, a), None
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+        if cfg.unroll:
+            n = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
+            carry = (x, aux)
+            for i in range(n):
+                carry, _ = body(carry, jax.tree.map(lambda q: q[i],
+                                                    seg_params))
+            return carry
+        (x, aux), _ = jax.lax.scan(body, (x, aux), seg_params)
+        return x, aux
+
+    for i, seg in enumerate(build_plan(cfg)):
+        if seg[0] == "scan":
+            x, aux = run_scan(params[f"seg{i}"], x, aux, seg[1])
+        else:
+            x, aux = run_zamba(params[f"seg{i}"], x, aux, seg[2])
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, aux
+
+
+# ----------------------------------------------------------------- decode
+
+class DecodeState(NamedTuple):
+    caches: Any           # pytree of per-segment caches (stacked like params)
+    shared_caches: Any    # zamba shared-attn caches (stacked per group)
+    pos: jax.Array        # scalar int32 — next position to write
+
+
+def _seg_cache(cfg, kind, batch, capacity, dtype, n):
+    one = blk.block_init_cache(cfg, kind, batch, capacity, dtype)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy()
+                        if hasattr(x, "shape") else x, one)
+
+
+def init_cache(cfg, batch, capacity, dtype=None):
+    """Allocate the full decode state. ``capacity`` = KV slots (full seq for
+    decode_32k, sliding window for long_500k; SSM caches are O(1) anyway)."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    plan = build_plan(cfg)
+    caches = []
+    shared = None
+    for seg in plan:
+        if seg[0] == "scan":
+            _, kind, n = seg
+            caches.append(_seg_cache(cfg, kind, batch, capacity, dtype, n))
+        else:
+            _, n_groups, period = seg
+            inner = _seg_cache(cfg, ("ssm", "none"), batch, capacity, dtype,
+                               period)
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(),
+                inner))
+            shared = _seg_cache(cfg, ("attn", "dense"), batch, capacity,
+                                dtype, n_groups)
+    return DecodeState(caches=caches, shared_caches=shared,
+                       pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, state: DecodeState, tokens, cfg):
+    """One decode step. tokens: (B, 1) int32 → (logits (B,1,V), new state)."""
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    pos = state.pos
+    new_caches = []
+    shared_cache = state.shared_caches
+
+    for i, seg in enumerate(build_plan(cfg)):
+        seg_params = params[f"seg{i}"]
+        cache = state.caches[i]
+        if seg[0] == "scan":
+            _, kind, n = seg
+
+            def body(h, xs):
+                p_layer, c = xs
+                h, c = blk.block_decode(p_layer, h, cfg, kind, c, pos)
+                return h, c
+            if cfg.unroll:
+                cs = []
+                for i in range(n):
+                    x, ci = body(x, (jax.tree.map(lambda q: q[i],
+                                                  seg_params),
+                                     jax.tree.map(lambda q: q[i], cache)))
+                    cs.append(ci)
+                cache = jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
+            else:
+                x, cache = jax.lax.scan(body, x, (seg_params, cache))
+            new_caches.append(cache)
+        else:
+            _, n_groups, period = seg
+            shared = params["shared_attn"]
+
+            def body(h, xs):
+                p_group, c_group, c_shared = xs
+                cs = []
+                for j in range(period):
+                    p_layer = jax.tree.map(lambda q: q[j], p_group)
+                    c_layer = jax.tree.map(lambda q: q[j], c_group)
+                    h, c_new = blk.block_decode(p_layer, h, cfg,
+                                                ("ssm", "none"), c_layer,
+                                                pos)
+                    cs.append(c_new)
+                c_group = jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
+                h, c_shared = blk.shared_attn_decode(shared, h, cfg,
+                                                     c_shared, pos)
+                return h, (c_group, c_shared)
+            if cfg.unroll:
+                groups, shareds = [], []
+                n_groups = seg[1]
+                for i in range(n_groups):
+                    x, (cg, csh) = body(
+                        x, (jax.tree.map(lambda q: q[i], seg_params),
+                            jax.tree.map(lambda q: q[i], cache),
+                            jax.tree.map(lambda q: q[i], shared_cache)))
+                    groups.append(cg)
+                    shareds.append(csh)
+                cache = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+                shared_cache = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *shareds)
+            else:
+                x, (cache, shared_cache) = jax.lax.scan(
+                    body, x, (seg_params, cache, shared_cache))
+            new_caches.append(cache)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, DecodeState(caches=new_caches, shared_caches=shared_cache,
+                               pos=pos + 1)

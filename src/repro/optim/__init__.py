@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, adam, adamw, clip_by_global_norm, apply_updates,
+)
+from repro.optim.schedules import (
+    constant, linear_warmup, cosine_decay, warmup_cosine,
+)

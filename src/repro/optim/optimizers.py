@@ -1,0 +1,103 @@
+"""Optimizers as pure-JAX (init, update) pairs over parameter pytrees —
+optax-style API without the dependency.
+
+  opt = adamw(3e-4, weight_decay=0.1)
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params)
+  params = apply_updates(params, updates)
+
+Learning rates may be floats or schedules (callables step → lr); the step
+counter lives inside the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# ----------------------------------------------------------------- SGD
+
+def sgd(lr: Schedule, momentum: float = 0.0, nesterov: bool = False
+        ) -> Optimizer:
+    def init(params):
+        mu = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+              if momentum else None)
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(
+                jnp.float32), state["mu"], grads)
+            g_eff = (jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), mu, grads)
+                if nesterov else mu)
+            upd = jax.tree.map(lambda g: -lr_t * g, g_eff)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+# ----------------------------------------------------------------- Adam(W)
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with f32 moments (params may be lower precision)."""
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(
+            jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1, b2, eps, weight_decay=0.0)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules: step (int32 array) → lr (f32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def f(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1),
+                           1.0)
+        return peak * frac
+    return f
+
+
+def cosine_decay(peak: float, decay_steps: int, floor: float = 0.0):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return f
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return f

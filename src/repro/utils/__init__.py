@@ -1,0 +1,2 @@
+from repro.utils.log import get_logger
+from repro.utils import trees, hlo

@@ -1,0 +1,69 @@
+"""HLO text analysis: collective-communication byte accounting for the
+roofline's third term (cost_analysis does not expose collective bytes).
+
+We parse the compiled module text and, for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, account the RESULT
+shape's bytes (a reasonable proxy for bytes-on-the-wire per participating
+device; all-gather results count the gathered size, reduce-scatter the
+scattered size).
+"""
+from __future__ import annotations
+
+import collections
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>\([^)]*\)|[^=(]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """{op: {"count": int, "bytes": int}} + totals.  '-done' halves of
+    async pairs are skipped (the '-start' carries the shape)."""
+    per_op = collections.defaultdict(lambda: {"count": 0, "bytes": 0})
+    for m in _OP_RE.finditer(hlo_text):
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        per_op[op]["count"] += 1
+        per_op[op]["bytes"] += _shape_bytes(m.group("result"))
+    total_bytes = sum(v["bytes"] for v in per_op.values())
+    total_count = sum(v["count"] for v in per_op.values())
+    return {"per_op": dict(per_op), "total_bytes": total_bytes,
+            "total_count": total_count}
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def dominant_collective(stats: dict) -> str:
+    if not stats["per_op"]:
+        return "none"
+    return max(stats["per_op"].items(), key=lambda kv: kv[1]["bytes"])[0]

@@ -1,0 +1,47 @@
+"""Small pytree helpers used across the framework (no optax dependency)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays/ShapeDtypeStructs."""
+    return sum(int(x.size) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Inner product of two pytrees."""
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, leaves)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,122 @@
+"""AGREE protocol (Algorithm 1) — Proposition 1 contraction, weight
+matrices, and equivalence of formulations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.agree import agree, agree_power
+from repro.core import theory
+from repro.distributed import (
+    erdos_renyi, ring, torus2d, hypercube, complete, star, path_graph,
+    metropolis_weights, equal_neighbor_weights, lazy_weights,
+    circulant_weights, gamma,
+)
+from repro.distributed.mixing import is_doubly_stochastic
+
+
+# ---------------------------------------------------------------- graphs
+
+@pytest.mark.parametrize("make,args", [
+    (ring, (8,)), (torus2d, (4, 4)), (hypercube, (4,)), (complete, (7,)),
+    (star, (9,)), (path_graph, (6,)), (erdos_renyi, (12, 0.4)),
+])
+def test_graph_families_connected_symmetric(make, args):
+    g = make(*args)
+    assert g.is_connected()
+    assert np.array_equal(g.adj, g.adj.T)
+    assert np.all(np.diag(g.adj) == 0)
+
+
+def test_erdos_renyi_edge_density():
+    # the old triu bug made every graph complete; check density ≈ p
+    g = erdos_renyi(60, 0.3, seed=5, ensure_connected=False)
+    density = g.n_edges / (60 * 59 / 2)
+    assert 0.2 < density < 0.4
+
+
+# ---------------------------------------------------------------- weights
+
+@pytest.mark.parametrize("weights", [metropolis_weights, lazy_weights])
+@pytest.mark.parametrize("graph", [ring(8), erdos_renyi(10, 0.5, seed=2),
+                                   star(6), torus2d(3, 3)])
+def test_weights_doubly_stochastic_contractive(weights, graph):
+    w = weights(graph)
+    assert is_doubly_stochastic(w)
+    assert gamma(w) < 1.0
+
+
+def test_equal_neighbor_doubly_stochastic_iff_regular():
+    w_ring = equal_neighbor_weights(ring(8))        # regular
+    assert is_doubly_stochastic(w_ring)
+    w_star = equal_neighbor_weights(star(6))        # irregular
+    assert np.allclose(w_star.sum(axis=1), 1.0)     # always row-stochastic
+
+
+def test_circulant_matches_metropolis_on_ring():
+    # the TPU-runtime circulant W with shifts (±1) is a valid ring mixer
+    w = circulant_weights(8, (-1, 1))
+    assert is_doubly_stochastic(w)
+    assert gamma(w) < 1.0
+
+
+# ---------------------------------------------------------------- AGREE
+
+def test_agree_preserves_average_and_contracts():
+    g = erdos_renyi(12, 0.5, seed=3)
+    w = jnp.asarray(metropolis_weights(g))
+    z = jax.random.normal(jax.random.PRNGKey(0), (12, 5, 3), dtype=jnp.float64)
+    z_bar = jnp.mean(z, axis=0)
+    out = agree(z, w, 40)
+    # doubly stochastic ⇒ average preserved exactly
+    np.testing.assert_allclose(np.mean(np.asarray(out), axis=0),
+                               np.asarray(z_bar), rtol=1e-10)
+    # contraction toward consensus
+    dev0 = float(jnp.max(jnp.abs(z - z_bar)))
+    dev = float(jnp.max(jnp.abs(out - z_bar)))
+    assert dev < 1e-3 * dev0
+
+
+def test_agree_equals_power_form():
+    g = ring(10)
+    w = jnp.asarray(metropolis_weights(g))
+    z = jax.random.normal(jax.random.PRNGKey(1), (10, 4), dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(agree(z, w, 7)),
+                               np.asarray(agree_power(z, w, 7)), rtol=1e-9)
+
+
+def test_agree_zero_rounds_identity():
+    z = jnp.ones((4, 2))
+    w = jnp.asarray(metropolis_weights(ring(4)))
+    assert agree(z, w, 0) is z
+
+
+@settings(max_examples=20, deadline=None)
+@given(t_con=st.integers(min_value=1, max_value=30))
+def test_prop1_contraction_rate(t_con):
+    """Proposition 1: max_g |z_g − z̄| ≤ γ^T_con · max_g |z_g^in − z̄|
+    (for symmetric doubly-stochastic W the bound holds in ℓ₂ per column)."""
+    g = erdos_renyi(9, 0.6, seed=7)
+    w = metropolis_weights(g)
+    gm = gamma(w)
+    z = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (9,),
+                                     dtype=jnp.float64))
+    z_bar = z.mean()
+    out = np.asarray(agree(jnp.asarray(z), jnp.asarray(w), t_con))
+    lhs = np.linalg.norm(out - z_bar)
+    rhs = gm ** t_con * np.linalg.norm(z - z_bar)
+    assert lhs <= rhs * (1 + 1e-9)
+
+
+def test_prop1_round_bound_sufficient():
+    """theory.prop1_consensus_rounds gives enough rounds for ε_con accuracy."""
+    g = erdos_renyi(9, 0.6, seed=7)
+    w = metropolis_weights(g)
+    eps_con = 1e-3
+    t_con = theory.prop1_consensus_rounds(9, eps_con, gamma(w))
+    z = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (9,),
+                                     dtype=jnp.float64))
+    out = np.asarray(agree(jnp.asarray(z), jnp.asarray(w), t_con))
+    z_bar = z.mean()
+    assert np.max(np.abs(out - z_bar)) <= eps_con * np.max(np.abs(z - z_bar))

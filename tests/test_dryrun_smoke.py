@@ -1,0 +1,29 @@
+"""Dry-run smoke test: one (arch × shape × mesh) combination end-to-end in
+a subprocess with 512 fake devices — proves the production-mesh pipeline
+(mesh build, shardings, lower, compile, memory/cost/collective analyses,
+calibration) works from a clean process."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.parametrize("arch,shape", [("mamba2-130m", "decode_32k")])
+def test_dryrun_one_combo(tmp_path, arch, shape):
+    out = tmp_path / "dryrun"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(out)],
+        capture_output=True, text=True, cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"
+    rec = json.loads((out / f"{arch}_{shape}_16x16.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    rf = rec["roofline"]
+    assert rf["compute_s"] > 0 and rf["memory_s"] > 0
+    assert rf["dominant"] in ("compute", "memory", "collective")
+    assert rec["cost"]["flops"] > rec["cost_raw"]["flops"]  # calibration >
+    assert rec["memory"]["peak_bytes"] > 0

@@ -1,0 +1,129 @@
+"""optim / data / checkpoint substrate tests (incl. hypothesis properties)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (adamw, sgd, adam, clip_by_global_norm,
+                         apply_updates, warmup_cosine, cosine_decay,
+                         linear_warmup, constant)
+from repro.data import SyntheticLM, make_batch_for
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.configs import get_config
+
+
+# ----------------------------------------------------------------- optim
+
+def _quadratic_params():
+    return {"a": jnp.array([3.0, -2.0], jnp.float32),
+            "b": {"c": jnp.array([[1.5]], jnp.float32)}}
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9),
+    lambda: sgd(0.05, momentum=0.9, nesterov=True),
+    lambda: adam(0.1), lambda: adamw(0.1, weight_decay=0.01)])
+def test_optimizers_minimize_quadratic(make_opt):
+    opt = make_opt()
+    params = _quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return (jnp.sum(p["a"] ** 2) + jnp.sum(p["b"]["c"] ** 2))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"x": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(gn), 20.0)
+    total = float(jnp.linalg.norm(clipped["x"]))
+    assert np.isclose(total, 1.0, rtol=1e-5)
+    # below threshold: unchanged
+    unchanged, _ = clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(unchanged["x"]),
+                               np.asarray(g["x"]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(step=st.integers(min_value=0, max_value=10_000))
+def test_schedules_bounded(step):
+    s = jnp.array(step, jnp.int32)
+    for sched in (constant(1e-3), linear_warmup(1e-3, 100),
+                  cosine_decay(1e-3, 5000, floor=1e-5),
+                  warmup_cosine(1e-3, 100, 5000, floor=1e-5)):
+        v = float(sched(s))
+        assert 0.0 <= v <= 1e-3 + 1e-9
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, 10, 100)
+    assert float(sched(jnp.array(0))) == 0.0
+    assert np.isclose(float(sched(jnp.array(10))), 1.0)
+    assert float(sched(jnp.array(100))) < 1e-6
+    # monotone rise through warmup
+    vals = [float(sched(jnp.array(i))) for i in range(11)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+
+
+# ----------------------------------------------------------------- data
+
+def test_synthetic_lm_deterministic_and_disjoint():
+    ds = SyntheticLM(vocab_size=100, seq_len=16, batch_size=4, seed=1)
+    a = ds.batch(step=3, node=0)
+    b = ds.batch(step=3, node=0)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = ds.batch(step=3, node=1)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    assert a["tokens"].shape == (4, 16)
+    assert int(a["tokens"].min()) >= 0 and int(a["tokens"].max()) < 100
+
+
+def test_make_batch_for_vlm():
+    cfg = get_config("llava-next-mistral-7b").smoke()
+    b = make_batch_for(cfg, batch=2, seq=32)
+    assert b["tokens"].shape == (2, 32 - cfg.vis_tokens)
+    assert b["vis_embed"].shape == (2, cfg.vis_tokens, cfg.d_model)
+    assert b["labels"].shape == b["tokens"].shape
+
+
+# ----------------------------------------------------------------- ckpt
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen3-1.7b").smoke()
+    from repro.models import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 100, params)
+    assert latest_step(d) == 100
+    like = init_params(jax.random.PRNGKey(1), cfg)      # different values
+    restored = restore_checkpoint(d, 100, like)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_multiple_steps(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": jnp.arange(10.0)}
+    save_checkpoint(d, 1, tree)
+    save_checkpoint(d, 20, jax.tree.map(lambda x: x * 2, tree))
+    assert latest_step(d) == 20
+    r = restore_checkpoint(d, 20, tree)
+    np.testing.assert_allclose(np.asarray(r["w"]), np.arange(10.0) * 2)
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 0, {"w": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(d, 0, {"w": jnp.ones(3), "extra": jnp.ones(2)})
