@@ -23,6 +23,96 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6    # µs
 
 
+# ------------------------------------------------- AltGDmin engine
+
+def altgdmin_iter_flops(L, tpn, n, d, r, *, fused: bool) -> int:
+    """Model FLOPs of one outer AltGDmin iteration (min-B + gradient)
+    across all L·tpn tasks.  The unfused path builds the streamed
+    A = X_t U twice (Gram pass + gradient pass 0); the fused engine once —
+    the 2ndr A-build dominates: dropping one of three X-sized streams is
+    one fewer HBM sweep over X (~33% of X traffic) and an
+    r/(2r+1) ≈ 40–44% model-FLOP cut at the paper's r=4–10 shapes."""
+    T = L * tpn
+    a_build = 2 * n * d * r
+    gram = 2 * n * r * r + 2 * n * r          # G = AᵀA, c = Aᵀy
+    solve = (2 * r ** 3) // 3                 # r×r Cholesky
+    resid = 2 * n * r + n                     # A b − y
+    grad = 2 * n * d + d * r                  # Xᵀresid, outer with b
+    per_task = a_build * (1 if fused else 2) + gram + solve + resid + grad
+    return T * per_task
+
+
+def _engine_instance(L, tpn, n, d, r, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(ks[0], (L, tpn, n, d), jnp.float32)
+    U = jnp.stack([
+        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(ks[1], g),
+                                        (d, r), jnp.float32))[0]
+        for g in range(L)])
+    y = jax.random.normal(ks[2], (L, tpn, n), jnp.float32)
+    return X, U, y
+
+
+# Paper Experiment-1 regime: the CI-scale variant, its 10× scaling, and
+# (full runs only) the exact paper shape L=20, T=600, d=600, n=30, r=4.
+ENGINE_SHAPES = (
+    dict(shape="exp1_small", L=10, tpn=15, n=30, d=150, r=4),
+    dict(shape="exp1_small_10x", L=10, tpn=30, n=30, d=750, r=4),
+)
+ENGINE_SHAPES_FULL = ENGINE_SHAPES + (
+    dict(shape="exp1_paper", L=20, tpn=30, n=30, d=600, r=4),
+)
+
+
+def bench_altgdmin_engine(quick: bool = False):
+    """µs/outer-iteration of the AltGDmin hot loop: fused engine vs the
+    unfused two-dispatch kernel pair vs the xla-ref einsum path.  On this
+    CPU container the Pallas backends run in interpret mode, so their
+    absolute timings are not TPU projections — the model-FLOP column is
+    the hardware-independent trajectory metric; xla-ref timings track the
+    simulator's real CPU cost."""
+    shapes = ENGINE_SHAPES if quick else ENGINE_SHAPES_FULL
+    rows = []
+    for cfg in shapes:
+        L, tpn, n, d, r = (cfg[k] for k in ("L", "tpn", "n", "d", "r"))
+        X, U, y = _engine_instance(L, tpn, n, d, r)
+        big = L * tpn * n * d >= 5_000_000    # interpret mode is slow here
+        reps_interp = 1 if (big or quick) else 3
+
+        def fused(backend, reps):
+            f = lambda X, U, y: ops.altgdmin_fused_step(
+                X, U, y, blk_d=256, backend=backend)
+            return _time(f, X, U, y, reps=reps)
+
+        def unfused(backend, reps):
+            def f(X, U, y):
+                B = ops.altgdmin_node_minimize_B(X, U, y, blk_d=256,
+                                                 backend=backend)
+                return ops.altgdmin_node_gradient(X, U, B, y, blk_d=256,
+                                                  backend=backend)
+            return _time(f, X, U, y, reps=reps)
+
+        variants = [
+            # the fused engine kernel (single dispatch, one A build)
+            ("fused", "pallas-interpret", True,
+             lambda: fused("pallas-interpret", reps_interp)),
+            # the same kernels unfused (gram dispatch + grad dispatch,
+            # A rebuilt in the gradient's pass 0)
+            ("unfused", "pallas-interpret", False,
+             lambda: unfused("pallas-interpret", reps_interp)),
+            # the seed simulator's einsum path (XLA schedules; A also
+            # materialized twice)
+            ("reference", "xla-ref", False, lambda: unfused("xla-ref", 5)),
+        ]
+        for engine_path, backend, is_fused, run in variants:
+            rows.append(dict(
+                cfg, engine=engine_path, backend=backend,
+                us_per_iteration=round(run(), 1),
+                model_flops_per_iteration=altgdmin_iter_flops(
+                    L, tpn, n, d, r, fused=is_fused)))
+    return rows
+
+
 def bench_kernels():
     rows = []
     key = jax.random.PRNGKey(0)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import argparse
 import csv
 import io
+import json
 import os
 import time
 
@@ -46,8 +47,29 @@ def main() -> None:
     from benchmarks.paper_figs import bench_fig1, bench_fig2
     from benchmarks.complexity import (bench_complexity_table,
                                        bench_trainer_comm)
-    from benchmarks.kernel_bench import bench_kernels
+    from benchmarks.kernel_bench import bench_altgdmin_engine, bench_kernels
 
+    t0 = time.time()
+    engine_rows = bench_altgdmin_engine(quick=args.quick)
+    emit("altgdmin_engine", engine_rows, args.out)
+    bench_json = {
+        "benchmark": "altgdmin_engine",
+        "description": "fused node-batched AltGDmin iteration engine: "
+                       "µs per outer iteration (min-B + gradient) and "
+                       "model FLOPs, fused vs unfused vs reference",
+        "note": "Pallas backends run in interpret mode on CPU — model "
+                "FLOPs are the hardware-independent trajectory metric",
+        "quick": args.quick,
+        "rows": engine_rows,
+    }
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for path in (os.path.join(args.out, "BENCH_altgdmin.json"),
+                 os.path.join(repo_root, "BENCH_altgdmin.json")):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(bench_json, f, indent=1)
+    print(f"[engine bench done in {time.time()-t0:.0f}s → "
+          f"BENCH_altgdmin.json]")
     t0 = time.time()
     emit("fig1_convergence_vs_Tcon", bench_fig1(trials), args.out)
     print(f"[fig1 done in {time.time()-t0:.0f}s]")

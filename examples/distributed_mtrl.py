@@ -40,8 +40,8 @@ def main():
         r=prob.r, T_pm=25, T_con=8)
     eta = resolve_eta(None, prob.n, R_diag=init.R_diag, L=L)
 
-    mesh = jax.make_mesh((L,), ("nodes",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((L,), ("nodes",))
     U_hw, _ = dif_altgdmin_mesh(init.U0, Xg, yg, mesh, "nodes", eta=eta,
                                 T_GD=200, T_con=2)
     sim = dif_altgdmin(init.U0, Xg, yg, W, eta=eta, T_GD=200, T_con=2,

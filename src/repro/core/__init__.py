@@ -12,6 +12,7 @@ from repro.core.altgdmin import (
     dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
     minimize_B, grad_U, RunResult,
 )
+from repro.core.engine import AltgdminEngine
 from repro.core import theory
 from repro.core import comm_model
 from repro.core.runtime import dif_altgdmin_mesh

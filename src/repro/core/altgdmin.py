@@ -17,6 +17,14 @@ Sample splitting: if Xg/yg carry a leading fold axis (F, L, ...), iteration
 τ uses fold (2τ-1 mod F) for the min step and fold (2τ mod F) for the
 gradient step, mirroring Algorithm 3's disjoint-set schedule; otherwise the
 same data is reused every iteration (as in the paper's simulations).
+
+Execution: every driver routes its min-B/gradient/combine phases through
+an :class:`repro.core.engine.AltgdminEngine` (``engine=`` or ``backend=``
+kwargs).  The default backend off-TPU is ``xla-ref`` — the seed's unfused
+einsum paths, bit-identical to the pre-engine code; ``pallas`` /
+``pallas-interpret`` select the fused node-batched kernel where one outer
+iteration is a single dispatch and AGREE runs as one precomputed
+W^{T_con} combine.
 """
 from __future__ import annotations
 
@@ -25,7 +33,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.agree import agree
+from repro.core.engine import (AltgdminEngine, ref_grad_U, ref_minimize_B,
+                               resolve_engine)
 from repro.core.metrics import subspace_distance, consensus_spread
 from repro.core.spectral import _qr_pos
 
@@ -43,44 +52,16 @@ class RunResult(NamedTuple):
 # shared pieces
 # ----------------------------------------------------------------------
 
-def minimize_B(U_nodes, Xg, yg):
-    """Min step (Algorithm 3 line 8): column-wise least squares
-    b_t = (X_t U_g)† y_t, batched over nodes and local tasks.
-
-    Solved via the normal equations with a Cholesky solve — A = X_t U_g is
-    n×r with tiny r, and AᵀA is well conditioned whp under Assumption 2.
-    """
-    def per_task(U, X, y):
-        A = X @ U                       # (n, r)
-        G = A.T @ A                     # (r, r)
-        c = A.T @ y                     # (r,)
-        return jax.scipy.linalg.solve(G, c, assume_a="pos")
-
-    return jax.vmap(lambda U, Xs, ys:
-                    jax.vmap(lambda X, y: per_task(U, X, y))(Xs, ys)
-                    )(U_nodes, Xg, yg)                     # (L, tpn, r)
-
-
-def grad_U(U_nodes, B_nodes, Xg, yg):
-    """Local gradient (Algorithm 3 line 11):
-    ∇f_g = Σ_{t∈S_g} X_tᵀ (X_t U_g b_t − y_t) b_tᵀ."""
-    def per_node(U, Xs, ys, Bs):
-        resid = jnp.einsum("tnd,dr,tr->tn", Xs, U, Bs) - ys    # (tpn, n)
-        return jnp.einsum("tnd,tn,tr->dr", Xs, resid, Bs)      # (d, r)
-
-    return jax.vmap(per_node)(U_nodes, Xg, yg, B_nodes)        # (L, d, r)
+# The unfused reference implementations live in repro.core.engine (they
+# are the engine's xla-ref backend); re-exported here under their
+# historical names.
+minimize_B = ref_minimize_B
+grad_U = ref_grad_U
 
 
 def theta_nodes(U_nodes, B_nodes):
     """θ_t = U_g b_t for local tasks: (L, tpn, d)."""
     return jnp.einsum("gdr,gtr->gtd", U_nodes, B_nodes)
-
-
-def _fold(data, idx):
-    """Select sample-split fold if a fold axis is present."""
-    if data.ndim == 5 or (data.ndim == 4 and data.shape[-1] != data.shape[-2]):
-        pass
-    return data
 
 
 def _select(Xg, yg, fold):
@@ -115,63 +96,72 @@ def resolve_eta(eta, n, sigma_max=None, R_diag=None, L=None,
 # ----------------------------------------------------------------------
 
 def dif_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int, T_con: int,
-                 U_star=None) -> RunResult:
+                 U_star=None, engine: Optional[AltgdminEngine] = None,
+                 backend: Optional[str] = None) -> RunResult:
     """Algorithm 3: adapt (min-B + local projected-GD pre-image) THEN
     combine (AGREE on the updated iterate), then QR retraction."""
     L = U0_nodes.shape[0]
     U_star_ = U_star if U_star is not None else U0_nodes[0]
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4                  # no sample-split fold axis
+    mix = eng.make_mixer(W, T_con)
 
     def step(U, tau):
         Xb, yb = _select(Xg, yg, 2 * tau)
-        B = minimize_B(U, Xb, yb)
         Xc, yc = _select(Xg, yg, 2 * tau + 1)
-        G = grad_U(U, B, Xc, yc)
+        B, G = eng.min_grad(U, Xb, yb, Xc, yc,
+                            same_data=same_data)   # lines 8 & 11, fused
         U_breve = U - (eta * L) * G           # local update (line 12)
-        U_tilde = agree(U_breve, W, T_con)    # diffusion     (line 13)
+        U_tilde = mix(U_breve)                # diffusion     (line 13)
         U_new, _ = _qr_pos(U_tilde)           # projection    (line 14)
         return U_new, _metrics(U_new, U_star_)
 
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0_nodes, jnp.arange(T_GD))
-    B_fin = minimize_B(U_fin, *_select(Xg, yg, 0))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
 
 
 def dec_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int, T_con: int,
-                 U_star=None) -> RunResult:
+                 U_star=None, engine: Optional[AltgdminEngine] = None,
+                 backend: Optional[str] = None) -> RunResult:
     """Dec-AltGDmin [9]: combine-then-adjust — consensus on the *gradients*
     first, then each node takes the projected-GD step with the gossiped
     gradient estimate."""
     L = U0_nodes.shape[0]
     U_star_ = U_star if U_star is not None else U0_nodes[0]
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4
+    mix = eng.make_mixer(W, T_con)
 
     def step(U, tau):
         Xb, yb = _select(Xg, yg, 2 * tau)
-        B = minimize_B(U, Xb, yb)
         Xc, yc = _select(Xg, yg, 2 * tau + 1)
-        G = grad_U(U, B, Xc, yc)
-        G_hat = agree(G, W, T_con)            # consensus on gradients
+        B, G = eng.min_grad(U, Xb, yb, Xc, yc, same_data=same_data)
+        G_hat = mix(G)                        # consensus on gradients
         U_new, _ = _qr_pos(U - (eta * L) * G_hat)
         return U_new, _metrics(U_new, U_star_)
 
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0_nodes, jnp.arange(T_GD))
-    B_fin = minimize_B(U_fin, *_select(Xg, yg, 0))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
 
 
 def centralized_altgdmin(U0, Xg, yg, *, eta: float, T_GD: int,
-                         U_star=None) -> RunResult:
+                         U_star=None, engine: Optional[AltgdminEngine] = None,
+                         backend: Optional[str] = None) -> RunResult:
     """AltGDmin [10] with a fusion center: exact gradient sum, single U.
     U0: (d, r).  Data still node-major for API symmetry."""
     U_star_ = U_star if U_star is not None else U0
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4
 
     def step(U, tau):
         Xb, yb = _select(Xg, yg, 2 * tau)
-        Un = U[None]
-        B = minimize_B(jnp.broadcast_to(Un, (Xb.shape[0],) + U.shape), Xb, yb)
         Xc, yc = _select(Xg, yg, 2 * tau + 1)
-        G = grad_U(jnp.broadcast_to(Un, (Xc.shape[0],) + U.shape), B, Xc, yc)
+        Ub = jnp.broadcast_to(U[None], (Xb.shape[0],) + U.shape)
+        B, G = eng.min_grad(Ub, Xb, yb, Xc, yc, same_data=same_data)
         grad = jnp.sum(G, axis=0)             # fusion-center aggregation
         U_new, _ = _qr_pos(U - eta * grad)
         sd = subspace_distance(U_new, U_star_)
@@ -180,13 +170,15 @@ def centralized_altgdmin(U0, Xg, yg, *, eta: float, T_GD: int,
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0, jnp.arange(T_GD))
     Xb, yb = _select(Xg, yg, 0)
-    B_fin = minimize_B(jnp.broadcast_to(U_fin[None],
-                                        (Xb.shape[0],) + U_fin.shape), Xb, yb)
+    B_fin = eng.minimize_B(jnp.broadcast_to(U_fin[None],
+                                            (Xb.shape[0],) + U_fin.shape),
+                           Xb, yb)
     return RunResult(U_fin[None], B_fin, sd_max, sd_mean, spread, eta)
 
 
 def dgd_altgdmin(U0_nodes, Xg, yg, adj, *, eta: float, T_GD: int,
-                 U_star=None) -> RunResult:
+                 U_star=None, engine: Optional[AltgdminEngine] = None,
+                 backend: Optional[str] = None) -> RunResult:
     """DGD-variation of AltGDmin (Experiment 1 (iii)):
     Ũ_g ← QR( (1/deg_g) Σ_{g'∈N_g} U_g'^{(τ-1)} − η ∇f_g ).
     ``adj``: (L, L) adjacency (no self loops), per the paper's formula the
@@ -194,17 +186,19 @@ def dgd_altgdmin(U0_nodes, Xg, yg, adj, *, eta: float, T_GD: int,
     deg = jnp.maximum(jnp.sum(adj, axis=1), 1.0)
     M = adj / deg[:, None]                    # row-stochastic neighbour avg
     U_star_ = U_star if U_star is not None else U0_nodes[0]
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4
+    nbr_mix = eng.make_neighbor_mixer(M)
 
     def step(U, tau):
         Xb, yb = _select(Xg, yg, 2 * tau)
-        B = minimize_B(U, Xb, yb)
         Xc, yc = _select(Xg, yg, 2 * tau + 1)
-        G = grad_U(U, B, Xc, yc)
-        nbr = jnp.einsum("gh,hdr->gdr", M.astype(U.dtype), U)
+        B, G = eng.min_grad(U, Xb, yb, Xc, yc, same_data=same_data)
+        nbr = nbr_mix(U)
         U_new, _ = _qr_pos(nbr - eta * G)
         return U_new, _metrics(U_new, U_star_)
 
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0_nodes, jnp.arange(T_GD))
-    B_fin = minimize_B(U_fin, *_select(Xg, yg, 0))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)

@@ -1,0 +1,171 @@
+"""Fused node-batched AltGDmin iteration engine.
+
+The simulator's hot loop (Algorithm 3 lines 8–14) factors into three
+phases per outer iteration: min-B (per-task least squares), the gradient
+of f_g w.r.t. U_g, and the AGREE combine.  This module is the single
+place where those phases bind to an execution backend:
+
+  * ``xla-ref``          — the seed's unfused ``vmap``/``einsum`` paths,
+                           dtype-preserving (works in x64); the numerics
+                           fallback every other backend is tested against.
+  * ``pallas-interpret`` — the fused node-batched Pallas kernel
+                           (:func:`repro.kernels.altgdmin_ls.node_fused_iter`)
+                           executed in interpret mode (CPU-exact validation
+                           of the TPU code path).
+  * ``pallas``           — the same kernel compiled (TPU production).
+
+On the fused backends one outer iteration is ONE kernel dispatch that
+streams ``A = X_t U`` exactly once per task (the unfused path builds it
+twice: once for the Gram system, once in the gradient's pass 0), and the
+AGREE phase is hoisted onto the precomputed ``W^{T_con}`` single-product
+form (:func:`repro.core.agree.agree_power`) executed as one fused
+weighted combine (``ops.mix_nodes``) instead of T_con HBM sweeps.
+
+Backend selection: explicit argument → ``REPRO_ENGINE_BACKEND`` env →
+``REPRO_KERNEL_BACKEND`` env → ``pallas`` on TPU, ``xla-ref`` elsewhere
+(so existing CPU callers keep bit-identical trajectories by default).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agree import agree
+from repro.kernels import ops
+
+
+# ----------------------------------------------------------------------
+# reference phase implementations (the seed's unfused simulator paths)
+# ----------------------------------------------------------------------
+
+def ref_minimize_B(U_nodes, Xg, yg):
+    """Min step (Algorithm 3 line 8): column-wise least squares
+    b_t = (X_t U_g)† y_t, batched over nodes and local tasks.
+
+    Solved via the normal equations with a Cholesky solve — A = X_t U_g is
+    n×r with tiny r, and AᵀA is well conditioned whp under Assumption 2.
+    """
+    def per_task(U, X, y):
+        A = X @ U                       # (n, r)
+        G = A.T @ A                     # (r, r)
+        c = A.T @ y                     # (r,)
+        return jax.scipy.linalg.solve(G, c, assume_a="pos")
+
+    return jax.vmap(lambda U, Xs, ys:
+                    jax.vmap(lambda X, y: per_task(U, X, y))(Xs, ys)
+                    )(U_nodes, Xg, yg)                     # (L, tpn, r)
+
+
+def ref_grad_U(U_nodes, B_nodes, Xg, yg):
+    """Local gradient (Algorithm 3 line 11):
+    ∇f_g = Σ_{t∈S_g} X_tᵀ (X_t U_g b_t − y_t) b_tᵀ."""
+    def per_node(U, Xs, ys, Bs):
+        resid = jnp.einsum("tnd,dr,tr->tn", Xs, U, Bs) - ys    # (tpn, n)
+        return jnp.einsum("tnd,tn,tr->dr", Xs, resid, Bs)      # (d, r)
+
+    return jax.vmap(per_node)(U_nodes, Xg, yg, B_nodes)        # (L, d, r)
+
+
+def default_engine_backend() -> str:
+    """ops.default_backend's chain (override → env → auto) with the
+    engine's extra env var and an xla-ref off-TPU fallback — NOT
+    pallas-interpret, so CPU simulator runs keep seed numerics unless
+    fused is asked for."""
+    return ops.default_backend(extra_env="REPRO_ENGINE_BACKEND",
+                               off_tpu_fallback="xla-ref")
+
+
+class AltgdminEngine:
+    """Binds the three AltGDmin phases to a kernel backend.
+
+    One instance is shared by all four algorithm drivers in
+    :mod:`repro.core.altgdmin`; construct with ``backend=`` to opt into
+    the fused path, or leave None for env/auto selection."""
+
+    def __init__(self, backend: str | None = None, *, blk_d: int = 256):
+        if backend is None:
+            backend = default_engine_backend()
+        if backend not in ops.BACKENDS:
+            raise ValueError(f"unknown engine backend {backend!r}; "
+                             f"expected one of {ops.BACKENDS}")
+        self.backend = backend
+        self.blk_d = blk_d
+
+    @property
+    def fused(self) -> bool:
+        return self.backend != "xla-ref"
+
+    # ------------------------------------------------------------ phases
+
+    def minimize_B(self, U_nodes, Xg, yg):
+        """(L, tpn, r) min-B solutions."""
+        if not self.fused:
+            return ref_minimize_B(U_nodes, Xg, yg)
+        B = ops.altgdmin_node_minimize_B(Xg, U_nodes, yg, blk_d=self.blk_d,
+                                         backend=self.backend)
+        return B.astype(U_nodes.dtype)
+
+    def grad_U(self, U_nodes, B_nodes, Xg, yg):
+        """(L, d, r) local gradients for a given B (sample-split path)."""
+        if not self.fused:
+            return ref_grad_U(U_nodes, B_nodes, Xg, yg)
+        G = ops.altgdmin_node_gradient(Xg, U_nodes, B_nodes, yg,
+                                       blk_d=self.blk_d,
+                                       backend=self.backend)
+        return G.astype(U_nodes.dtype)
+
+    def min_grad(self, U_nodes, X_min, y_min, X_grad, y_grad, *,
+                 same_data: bool):
+        """Min-B on (X_min, y_min) then ∇f on (X_grad, y_grad).
+
+        When both halves see the same fold (``same_data`` — the paper's
+        simulations) and the backend is fused, this is ONE kernel dispatch
+        reusing the streamed A accumulator; otherwise A must be rebuilt on
+        the gradient fold and the two-dispatch path runs."""
+        if self.fused and same_data:
+            B, G = ops.altgdmin_fused_step(X_min, U_nodes, y_min,
+                                           blk_d=self.blk_d,
+                                           backend=self.backend)
+            return B.astype(U_nodes.dtype), G.astype(U_nodes.dtype)
+        B = self.minimize_B(U_nodes, X_min, y_min)
+        return B, self.grad_U(U_nodes, B, X_grad, y_grad)
+
+    # ----------------------------------------------------------- combine
+
+    def make_mixer(self, W, T_con: int):
+        """The AGREE phase as a callable Z ↦ consensus(Z).
+
+        xla-ref keeps the seed's sequential T_con-round ``agree`` (exact
+        numerics); fused backends hoist onto the precomputed W^{T_con}
+        (``agree_power``) and run it as one fused weighted combine."""
+        if T_con == 0:
+            return lambda Z: Z
+        if not self.fused:
+            return lambda Z: agree(Z, W, T_con)
+        Wp = jnp.linalg.matrix_power(W.astype(jnp.float32), T_con)
+        return lambda Z: ops.mix_nodes(Z, Wp, backend=self.backend
+                                       ).astype(Z.dtype)
+
+    def make_neighbor_mixer(self, M):
+        """DGD's row-stochastic neighbour average Z ↦ M Z (single round,
+        no self weight — M comes in precomputed)."""
+        if not self.fused:
+            return lambda Z: jnp.einsum("gh,h...->g...", M.astype(Z.dtype),
+                                        Z)
+        return lambda Z: ops.mix_nodes(Z, M.astype(jnp.float32),
+                                       backend=self.backend).astype(Z.dtype)
+
+
+def resolve_engine(engine=None, backend: str | None = None,
+                   blk_d: int = 256) -> AltgdminEngine:
+    """Normalize the (engine, backend) pair every algorithm driver takes:
+    pass an engine through, else build one from ``backend``.  Passing
+    both with disagreeing backends is an error (the explicit engine would
+    silently win otherwise)."""
+    if engine is not None:
+        if backend is not None and backend != engine.backend:
+            raise ValueError(
+                f"conflicting engine selection: engine.backend="
+                f"{engine.backend!r} but backend={backend!r}")
+        return engine
+    return AltgdminEngine(backend, blk_d=blk_d)

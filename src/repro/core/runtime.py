@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.spectral import _qr_pos
 from repro.distributed.gossip import ring_weights
+from repro.utils.compat import shard_map as _shard_map
 
 
 def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
@@ -61,7 +62,7 @@ def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
         return out
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P(axis_name), P(axis_name), P(axis_name)),
         out_specs=(P(axis_name), P(axis_name)),
         axis_names={axis_name})

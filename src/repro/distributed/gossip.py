@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils.compat import shard_map as _shard_map
+
 
 def ring_weights(shifts: Sequence[int] = (-1, 1),
                  self_weight: float | None = None):
@@ -89,7 +91,7 @@ def shard_map_gossip(Z, mesh, axis_name: str, T_con: int,
     sw, wn = ring_weights(shifts, self_weight)
     spec = jax.sharding.PartitionSpec(axis_name)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=spec,
+    @functools.partial(_shard_map, mesh=mesh, in_specs=spec,
                        out_specs=spec, axis_names={axis_name})
     def run(z):
         def body(carry, _):

@@ -21,6 +21,35 @@ def _axpy_kernel(z_ref, nbr_ref, o_ref, *, w_self: float, w_nbr: float):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _mix_kernel(w_ref, z_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)               # (L, L)
+    z = z_ref[...].astype(jnp.float32)               # (L, blk_c)
+    o_ref[...] = jax.lax.dot_general(
+        w, z, (((1,), (0,)), ((), ()))).astype(o_ref.dtype)
+
+
+def mix_rows(W, Z, *, blk_c: int = 512, interpret: bool = True):
+    """Fused consensus combine Z ← W Z for a precomputed mixing matrix
+    (typically W^{T_con} from ``agree_power`` — the whole AGREE phase in
+    ONE weighted combine instead of T_con HBM sweeps).  The node count L
+    is small (≤ ~100), so W stays resident while Z streams in column
+    tiles.  W: (L, L); Z: (L, M), M a multiple of blk_c (ops.py pads)."""
+    L, M = Z.shape
+    blk_c = min(blk_c, M)
+    assert M % blk_c == 0
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=(M // blk_c,),
+        in_specs=[
+            pl.BlockSpec((L, L), lambda i: (0, 0)),
+            pl.BlockSpec((L, blk_c), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((L, blk_c), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((L, M), jnp.float32),
+        interpret=interpret,
+    )(W, Z)
+
+
 def gossip_combine(z, neighbors, w_self: float, w_nbr: float, *,
                    blk_rows: int = 256, interpret: bool = True):
     """z: (M, C); neighbors: (K, M, C) → (M, C)."""

@@ -120,6 +120,8 @@ def _measure(arch_cfg, shape_name, mesh, aggregation, t_con, fused,
             spec.step_fn,
             in_shardings=spec.in_shardings).lower(*spec.args).compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax<=0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     coll = collective_stats(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -184,6 +186,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, *,
                            + getattr(mem, "temp_size_in_bytes", 0))),
     }
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax<=0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
     rec["cost"] = {"flops": flops, "bytes_accessed": hbm_bytes}

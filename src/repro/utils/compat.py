@@ -1,0 +1,42 @@
+"""Version-portability shims for the jax APIs that moved between 0.4.x
+and 0.5+/0.6+.
+
+The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``); this container ships 0.4.37 where
+``shard_map`` still lives under ``jax.experimental`` and mesh axis types do
+not exist yet.  Everything here degrades to the old spelling with the same
+semantics (all axes auto / collective-explicit inside shard_map), so the
+rest of the codebase can use one call site.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (0.4.x).
+
+    ``axis_names`` is accepted for parity with the new API and dropped on
+    0.4.x, where every mesh axis is implicitly named inside the body."""
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, axis_names=axis_names)
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

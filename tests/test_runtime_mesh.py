@@ -33,8 +33,8 @@ SCRIPT = textwrap.dedent("""
     sim = dif_altgdmin(init.U0, Xg, yg, W, eta=eta, T_GD=150, T_con=2,
                        U_star=prob.U_star)
 
-    mesh = jax.make_mesh((L,), ("nodes",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((L,), ("nodes",))
     U_hw, B_hw = dif_altgdmin_mesh(init.U0, Xg, yg, mesh, "nodes",
                                    eta=eta, T_GD=150, T_con=2)
 
