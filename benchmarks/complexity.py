@@ -6,7 +6,6 @@ improvements made concrete.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import theory
 from repro.distributed import AggregationConfig, comm_bytes_per_step

@@ -9,7 +9,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 
@@ -80,8 +79,9 @@ def bench_altgdmin_engine(quick: bool = False):
         reps_interp = 1 if (big or quick) else 3
 
         def fused(backend, reps):
-            f = lambda X, U, y: ops.altgdmin_fused_step(
-                X, U, y, blk_d=256, backend=backend)
+            def f(X, U, y):
+                return ops.altgdmin_fused_step(X, U, y, blk_d=256,
+                                               backend=backend)
             return _time(f, X, U, y, reps=reps)
 
         def unfused(backend, reps):

@@ -5,78 +5,63 @@
          Dec-AltGDmin, centralized AltGDmin, DGD; T_con ∈ {2, 5, 10}.
   fig2 — Experiment 2: robustness to connectivity, p ∈ {0.2, 0.5, 0.8}.
 
-Each returns rows of CSV records; benchmarks.run prints them and writes
-experiments/bench/*.csv.
+Each figure is a sweep of :class:`ExperimentSpec` cells — algorithms ×
+presets × trials — driven entirely through ``run_experiment``; the Trace
+carries the comm-model wall-clock axis, so nothing is recomputed here.
+Each bench returns rows of CSV records; benchmarks.run prints them and
+writes experiments/bench/*.csv.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    generate_problem, node_view, decentralized_spectral_init,
-    dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
-)
-from repro.core.altgdmin import resolve_eta
-from repro.core.comm_model import (
-    decentralized_time_axis, centralized_time_axis, ETHERNET_1GBPS,
-)
-from repro.distributed import erdos_renyi, metropolis_weights, gamma
+from repro.api import (ExperimentSpec, InitSpec, ProblemSpec, SolverSpec,
+                       TopologySpec, materialize, run_experiment)
+
+ALGORITHMS = {
+    "dif_altgdmin": "dif_altgdmin",
+    "dec_altgdmin": "dec_altgdmin",
+    "altgdmin_central": "centralized_altgdmin",
+    "dgd_variant": "dgd_altgdmin",
+}
 
 
-def _setup(cfg, trial: int):
-    prob = generate_problem(jax.random.PRNGKey(cfg.seed + trial),
-                            d=cfg.d, T=cfg.T, r=cfg.r, n=cfg.n, L=cfg.L,
-                            kappa=2.0)
-    Xg, yg = node_view(prob)
-    graph = erdos_renyi(cfg.L, cfg.p, seed=cfg.seed + 100 + trial)
-    W = jnp.asarray(metropolis_weights(graph))
-    init = decentralized_spectral_init(
-        jax.random.PRNGKey(cfg.seed + 200 + trial), Xg, yg, W,
-        kappa=prob.kappa, mu=prob.mu, r=cfg.r, T_pm=cfg.T_pm,
-        T_con=cfg.T_con)
-    eta = resolve_eta(None, cfg.n, R_diag=init.R_diag, L=cfg.L)
-    return prob, Xg, yg, graph, W, init, eta
+def _spec(cfg, trial: int, solver: str) -> ExperimentSpec:
+    """One sweep cell.  Problem/topology/init sub-specs depend only on
+    (cfg, trial), so the four algorithms of a cell share identical data,
+    graph, starting bases, and η (the keys derive from the spec-level
+    run key plus these seeds)."""
+    return ExperimentSpec(
+        name=cfg.name,
+        problem=ProblemSpec(d=cfg.d, T=cfg.T, r=cfg.r, n=cfg.n, L=cfg.L,
+                            kappa=2.0),
+        topology=TopologySpec(family="erdos_renyi", p=cfg.p,
+                              seed=cfg.seed + 100 + trial,
+                              weights="metropolis"),
+        init=InitSpec(T_pm=cfg.T_pm, T_con=cfg.T_con),
+        solver=SolverSpec(name=solver, T_GD=cfg.T_GD, T_con=cfg.T_con),
+    )
 
 
-def _algorithms(cfg, prob, Xg, yg, graph, W, init, eta):
-    kw = dict(eta=eta, T_GD=cfg.T_GD, U_star=prob.U_star)
-    return {
-        "dif_altgdmin": lambda: dif_altgdmin(init.U0, Xg, yg, W,
-                                             T_con=cfg.T_con, **kw),
-        "dec_altgdmin": lambda: dec_altgdmin(init.U0, Xg, yg, W,
-                                             T_con=cfg.T_con, **kw),
-        "altgdmin_central": lambda: centralized_altgdmin(init.U0[0], Xg,
-                                                         yg, **kw),
-        "dgd_variant": lambda: dgd_altgdmin(
-            init.U0, Xg, yg, jnp.asarray(graph.adj, jnp.float64), **kw),
-    }
-
-
-def _time_axis(alg: str, cfg, graph, n_iters: int):
-    if alg == "altgdmin_central":
-        return centralized_time_axis(n_iters, cfg.d, cfg.r, cfg.L, 1e-3)
-    t_con = 1 if alg == "dgd_variant" else cfg.T_con
-    return decentralized_time_axis(n_iters, t_con, cfg.d, cfg.r,
-                                   graph.max_degree, 1e-3)
-
-
-def run_experiment(configs, n_trials: int, checkpoints=(0, 0.25, 0.5,
-                                                        0.75, 1.0)):
+def run_experiment_grid(configs, n_trials: int,
+                        checkpoints=(0, 0.25, 0.5, 0.75, 1.0)):
     rows = []
     for cfg in configs:
-        acc = {}
-        for trial in range(n_trials):
-            prob, Xg, yg, graph, W, init, eta = _setup(cfg, trial)
-            for alg, fn in _algorithms(cfg, prob, Xg, yg, graph, W, init,
-                                       eta).items():
-                sd = np.asarray(fn().sd_max)
-                acc.setdefault(alg, []).append((sd, graph))
-        for alg, runs in acc.items():
-            sds = np.stack([sd for sd, _ in runs])
-            mean_sd = sds.mean(axis=0)
-            t_axis = _time_axis(alg, cfg, runs[0][1], len(mean_sd))
+        acc = {}          # alg -> list of (sd_max, time_axis); keep only
+        for trial in range(n_trials):             # what the rows need
+            # the four solvers of one cell share the materialization
+            # (identical problem/topology/init sub-specs and key)
+            mat = materialize(_spec(cfg, trial, "dif_altgdmin"),
+                              key=cfg.seed + trial)
+            for alg, solver in ALGORITHMS.items():
+                spec = _spec(cfg, trial, solver)
+                trace = run_experiment(spec, key=cfg.seed + trial,
+                                       materialized=mat)
+                acc.setdefault(alg, []).append((trace.sd_max,
+                                                trace.time_axis))
+        for alg, results in acc.items():
+            mean_sd = np.stack([sd for sd, _ in results]).mean(axis=0)
+            t_axis = results[0][1]
             for frac in checkpoints:
                 i = min(int(frac * (len(mean_sd) - 1)), len(mean_sd) - 1)
                 rows.append({
@@ -92,10 +77,18 @@ def run_experiment(configs, n_trials: int, checkpoints=(0, 0.25, 0.5,
 def bench_fig1(n_trials: int = 2):
     """Experiment 1: vary T_con (uses the scaled-down preset)."""
     from repro.configs.paper import EXPERIMENT1_SMALL
-    return run_experiment(EXPERIMENT1_SMALL, n_trials)
+    return run_experiment_grid(EXPERIMENT1_SMALL, n_trials)
 
 
 def bench_fig2(n_trials: int = 2):
     """Experiment 2: vary edge probability p."""
     from repro.configs.paper import EXPERIMENT2_SMALL
-    return run_experiment(EXPERIMENT2_SMALL, n_trials)
+    return run_experiment_grid(EXPERIMENT2_SMALL, n_trials)
+
+
+def specs_for_figure(configs, solvers=tuple(ALGORITHMS.values()),
+                     trial: int = 0):
+    """The sweep grid as serializable specs (JSON round-trip safe) — for
+    external drivers that want to shard cells across workers."""
+    return [_spec(cfg, trial, solver)
+            for cfg in configs for solver in solvers]

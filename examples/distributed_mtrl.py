@@ -2,6 +2,12 @@
 = devices and AGREE = collective-permute ring gossip (shard_map), checked
 against the single-host simulator.
 
+With the declarative API this is ONE spec run on TWO substrates — the
+``substrate`` field is the only difference between the simulator call and
+the mesh call; min-B/gradient route through the same AltgdminEngine on
+both, so the comparison isolates the gossip lowering (dense W product vs
+collective-permute).
+
 Needs multiple devices, so it re-executes itself with 8 fake CPU devices
 if started with only one.
 
@@ -15,44 +21,37 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     raise SystemExit(subprocess.run([sys.executable] + sys.argv).returncode)
 
+import dataclasses
+
 import jax
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp                                       # noqa: E402
-import numpy as np                                            # noqa: E402
-from repro.core import (                                      # noqa: E402
-    generate_problem, node_view, decentralized_spectral_init,
-    dif_altgdmin, dif_altgdmin_mesh, subspace_distance,
+from repro.api import (                                       # noqa: E402
+    ExperimentSpec, ProblemSpec, TopologySpec, InitSpec, SolverSpec,
+    run_experiment,
 )
-from repro.core.altgdmin import resolve_eta                   # noqa: E402
-from repro.distributed import circulant_weights               # noqa: E402
 
 
 def main():
     L = 8
     print(f"devices: {len(jax.devices())} (one Dec-MTRL node per device)")
-    prob = generate_problem(jax.random.PRNGKey(0), d=100, T=64, r=4, n=30,
-                            L=L, kappa=2.0)
-    Xg, yg = node_view(prob)
-    W = jnp.asarray(circulant_weights(L, (-1, 1)))    # ring = ICI-native
-    init = decentralized_spectral_init(
-        jax.random.PRNGKey(1), Xg, yg, W, kappa=prob.kappa, mu=prob.mu,
-        r=prob.r, T_pm=25, T_con=8)
-    eta = resolve_eta(None, prob.n, R_diag=init.R_diag, L=L)
+    spec = ExperimentSpec(
+        name="mesh_vs_simulator",
+        problem=ProblemSpec(d=100, T=64, r=4, n=30, L=L, kappa=2.0),
+        topology=TopologySpec(family="ring", weights="circulant",
+                              shifts=(-1, 1)),     # ring = ICI-native
+        init=InitSpec(T_pm=25, T_con=8),
+        solver=SolverSpec(name="dif_altgdmin", T_GD=200, T_con=2),
+    )
 
-    from repro.utils.compat import make_mesh
-    mesh = make_mesh((L,), ("nodes",))
-    U_hw, _ = dif_altgdmin_mesh(init.U0, Xg, yg, mesh, "nodes", eta=eta,
-                                T_GD=200, T_con=2)
-    sim = dif_altgdmin(init.U0, Xg, yg, W, eta=eta, T_GD=200, T_con=2,
-                       U_star=prob.U_star)
+    sim = run_experiment(spec, key=0)
+    hw = run_experiment(dataclasses.replace(spec, substrate="mesh"), key=0)
 
-    sd_hw = max(float(subspace_distance(U, prob.U_star)) for U in U_hw)
-    sd_sim = float(sim.sd_max[-1])
-    drift = float(jnp.max(jnp.abs(U_hw - sim.U_nodes)))
-    print(f"mesh runtime   : SD₂ = {sd_hw:.2e}  (ring gossip, T_con=2, "
-          f"200 iters)")
-    print(f"simulator (W)  : SD₂ = {sd_sim:.2e}")
+    drift = float(jnp.max(jnp.abs(hw.U_nodes - sim.U_nodes)))
+    print(f"mesh runtime   : SD₂ = {hw.final_sd_max:.2e}  (ring gossip, "
+          f"T_con=2, 200 iters)")
+    print(f"simulator (W)  : SD₂ = {sim.final_sd_max:.2e}")
     print(f"max |U_hw − U_sim| = {drift:.2e}  (identical algorithm, "
           f"collective-permute vs matmul gossip)")
     assert drift < 1e-7

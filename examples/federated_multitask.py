@@ -7,12 +7,18 @@ node, exactly like the paper's B_g).  The backbone is synchronized by the
 paper's diffusion strategy; we compare against the fusion-center
 allreduce and against no communication at all.
 
+The closing section runs the paper's *linear* shared-U/local-B object on
+the same topology via the declarative API (``ExperimentSpec`` →
+``run_experiment``) — the exact setting Theorem 1 covers — so the deep
+and linear variants of the same federated structure sit side by side.
+
   PYTHONPATH=src python examples/federated_multitask.py
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api import (ExperimentSpec, InitSpec, ProblemSpec, SolverSpec,
+                       TopologySpec, run_experiment)
 from repro.configs import get_config
 from repro.data import SyntheticLM
 from repro.distributed.aggregation import AggregationConfig
@@ -75,6 +81,23 @@ def main():
     print("   per step (params only, heads stay local — federated);")
     print(" * allreduce keeps replicas exactly equal (spread 0);")
     print(" * no communication ('local') lets node backbones drift apart.")
+
+    # The linear-MTRL counterpart (the object Theorem 1 actually covers):
+    # same shared-representation/local-head structure, same ring, driven
+    # declaratively through the experiment API.
+    spec = ExperimentSpec(
+        name="linear_counterpart",
+        problem=ProblemSpec(d=80, T=32, r=4, n=30, L=N_NODES, kappa=2.0,
+                            dtype="float32"),
+        topology=TopologySpec(family="ring", weights="circulant"),
+        init=InitSpec(T_pm=20, T_con=6),
+        solver=SolverSpec(name="dif_altgdmin", T_GD=150, T_con=1),
+    )
+    trace = run_experiment(spec, key=0)
+    print(f"\nlinear MTRL counterpart (Dif-AltGDmin, T_con=1, same ring): "
+          f"SD₂ {trace.sd_max[0]:.2e} → {trace.final_sd_max:.2e} "
+          f"in {spec.solver.T_GD} iters — the shared-U/local-B structure "
+          f"the deep variant above inherits.")
 
 
 if __name__ == "__main__":

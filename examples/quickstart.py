@@ -1,64 +1,62 @@
-"""Quickstart — the paper in 60 seconds.
+"""Quickstart — the paper in 60 seconds, via the declarative API.
 
 Reproduces (at reduced scale) the paper's Experiment 1 comparison: the
 proposed Dif-AltGDmin vs centralized AltGDmin, Dec-AltGDmin, and the
 DGD-variant, on synthetic multi-task linear regression over an
-Erdős–Rényi network.  Prints the subspace-distance trajectory of each.
+Erdős–Rényi network.  One :class:`ExperimentSpec` describes the cell;
+``dataclasses.replace`` swaps the solver; ``run_experiment`` does the
+rest (problem → topology → spectral init → η → algorithm → metrics).
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp                                     # noqa: E402
 import numpy as np                                          # noqa: E402
 
-from repro.core import (                                    # noqa: E402
-    generate_problem, node_view, decentralized_spectral_init,
-    dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
+from repro.api import (                                     # noqa: E402
+    ExperimentSpec, ProblemSpec, TopologySpec, InitSpec, SolverSpec,
+    materialize, run_experiment,
 )
-from repro.core.altgdmin import resolve_eta                 # noqa: E402
-from repro.distributed import (                             # noqa: E402
-    erdos_renyi, metropolis_weights, gamma,
-)
+from repro.distributed import gamma                         # noqa: E402
 
 
 def main():
     # scaled-down Experiment 1: L=10 nodes, d=T=150, r=4, n=30, p=0.5
-    L, d, T, r, n = 10, 150, 150, 4, 30
-    prob = generate_problem(jax.random.PRNGKey(0), d=d, T=T, r=r, n=n,
-                            L=L, kappa=2.0)
-    Xg, yg = node_view(prob)
-    graph = erdos_renyi(L, 0.5, seed=1)
-    W = jnp.asarray(metropolis_weights(graph))
-    print(f"Dec-MTRL: L={L} nodes, d={d}, T={T} tasks, r={r}, n={n} "
-          f"samples/task (data-scarce: n < d)")
-    print(f"network: Erdős–Rényi p=0.5, γ(W)={gamma(np.asarray(W)):.3f}")
+    spec = ExperimentSpec(
+        name="quickstart_exp1",
+        problem=ProblemSpec(d=150, T=150, r=4, n=30, L=10, kappa=2.0),
+        topology=TopologySpec(family="erdos_renyi", p=0.5, seed=1,
+                              weights="metropolis"),
+        init=InitSpec(T_pm=30, T_con=10),
+        solver=SolverSpec(name="dif_altgdmin", T_GD=250, T_con=3),
+    )
+    p = spec.problem
+    print(f"Dec-MTRL: L={p.L} nodes, d={p.d}, T={p.T} tasks, r={p.r}, "
+          f"n={p.n} samples/task (data-scarce: n < d)")
 
-    init = decentralized_spectral_init(
-        jax.random.PRNGKey(1), Xg, yg, W, kappa=prob.kappa, mu=prob.mu,
-        r=r, T_pm=30, T_con=10)
-    eta = resolve_eta(None, n, R_diag=init.R_diag, L=L)
-    kw = dict(eta=eta, T_GD=250, U_star=prob.U_star)
+    mat = materialize(spec, key=0)     # shared by all four algorithms
+    print(f"network: Erdős–Rényi p={spec.topology.p}, "
+          f"γ(W)={gamma(np.asarray(mat.W)):.3f}")
 
-    runs = {
-        "Dif-AltGDmin (paper, T_con=3)":
-            dif_altgdmin(init.U0, Xg, yg, W, T_con=3, **kw),
-        "Dec-AltGDmin [9]  (T_con=3)":
-            dec_altgdmin(init.U0, Xg, yg, W, T_con=3, **kw),
-        "AltGDmin [10] (centralized)":
-            centralized_altgdmin(init.U0[0], Xg, yg, **kw),
-        "DGD-variant (baseline)":
-            dgd_altgdmin(init.U0, Xg, yg,
-                         jnp.asarray(graph.adj, jnp.float64), **kw),
-    }
+    runs = {}
+    for label, solver in [
+            ("Dif-AltGDmin (paper, T_con=3)", "dif_altgdmin"),
+            ("Dec-AltGDmin [9]  (T_con=3)", "dec_altgdmin"),
+            ("AltGDmin [10] (centralized)", "centralized_altgdmin"),
+            ("DGD-variant (baseline)", "dgd_altgdmin")]:
+        sp = dataclasses.replace(
+            spec, solver=dataclasses.replace(spec.solver, name=solver))
+        runs[label] = run_experiment(sp, key=0, materialized=mat)
 
     print(f"\n{'algorithm':<32}" + "".join(f"τ={t:<9}" for t in
                                            (0, 50, 100, 150, 200, 249)))
-    for name, res in runs.items():
-        sd = np.asarray(res.sd_max)
-        row = "".join(f"{sd[t]:<10.2e}" for t in (0, 50, 100, 150, 200, 249))
+    for name, trace in runs.items():
+        row = "".join(f"{trace.sd_max[t]:<10.2e}"
+                      for t in (0, 50, 100, 150, 200, 249))
         print(f"{name:<32}{row}")
 
     print("\nTakeaways (= the paper's Fig. 1):")

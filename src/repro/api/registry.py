@@ -1,0 +1,100 @@
+"""Solver registry — the four AltGDmin-family algorithms behind ONE call
+convention.
+
+The legacy drivers in :mod:`repro.core.altgdmin` have mutually
+inconsistent signatures (W vs adjacency vs no topology argument; stacked
+``U0_nodes`` vs a single ``U0``).  A :class:`SolverDef` records those
+differences as data — which topology materialization the solver consumes
+(``"W"``/``"adj"``/``"none"``), whether it is decentralized, and which
+communication pattern prices its wall-clock axis — so
+:func:`repro.api.runner.run_experiment` can drive any registered solver
+identically.  ``register_solver`` is open: new algorithms (e.g. the
+combine-rule variants of Exact Subspace Diffusion) plug in without
+touching the runner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import altgdmin as _alg
+from repro.core import runtime as _runtime
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverDef:
+    """One registered algorithm.
+
+    ``fn`` is the legacy driver; ``call`` (below) adapts the uniform
+    convention onto it.  ``topology`` names what the solver consumes:
+    ``"W"`` (mixing matrix), ``"adj"`` (float adjacency), ``"none"``
+    (fusion center).  ``comm`` prices the wall-clock axis: ``"gossip"``
+    (T_con AGREE rounds/iter), ``"neighbor"`` (1 exchange/iter),
+    ``"central"`` (gather + broadcast/iter).  ``mesh_capable`` marks
+    solvers with a shard_map runtime.
+    """
+    name: str
+    fn: Callable
+    topology: str = "W"             # "W" | "adj" | "none"
+    comm: str = "gossip"            # "gossip" | "neighbor" | "central"
+    decentralized: bool = True
+    mesh_fn: Callable | None = None  # shard_map runtime, if one exists
+
+    @property
+    def mesh_capable(self) -> bool:
+        return self.mesh_fn is not None
+
+    def call(self, U0_nodes, Xg, yg, W, adj, *, eta: float, T_GD: int,
+             T_con: int, U_star=None, engine=None) -> _alg.RunResult:
+        """Uniform convention: stacked node-major inputs; the def routes
+        the topology the solver needs and drops what it ignores."""
+        kw = dict(eta=eta, T_GD=T_GD, U_star=U_star, engine=engine)
+        if self.topology == "none":
+            U0 = U0_nodes if self.decentralized else U0_nodes[0]
+            return self.fn(U0, Xg, yg, **kw)
+        if self.topology == "adj":
+            return self.fn(U0_nodes, Xg, yg, adj, **kw)
+        return self.fn(U0_nodes, Xg, yg, W, T_con=T_con, **kw)
+
+
+SOLVERS: dict[str, SolverDef] = {}
+
+
+def register_solver(solver: SolverDef) -> SolverDef:
+    if solver.name in SOLVERS:
+        raise ValueError(f"solver {solver.name!r} already registered")
+    if solver.topology not in ("W", "adj", "none"):
+        raise ValueError(f"bad topology kind {solver.topology!r}")
+    if solver.comm not in ("gossip", "neighbor", "central"):
+        raise ValueError(f"bad comm pattern {solver.comm!r}")
+    SOLVERS[solver.name] = solver
+    return solver
+
+
+def get_solver(name: str) -> SolverDef:
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise ValueError(f"unknown solver {name!r}; registered: "
+                         f"{sorted(SOLVERS)}") from None
+
+
+def solver_names() -> tuple[str, ...]:
+    return tuple(sorted(SOLVERS))
+
+
+register_solver(SolverDef(
+    name="dif_altgdmin", fn=_alg.dif_altgdmin,
+    topology="W", comm="gossip", mesh_fn=_runtime.dif_altgdmin_mesh))
+
+register_solver(SolverDef(
+    name="dec_altgdmin", fn=_alg.dec_altgdmin,
+    topology="W", comm="gossip"))
+
+register_solver(SolverDef(
+    name="centralized_altgdmin", fn=_alg.centralized_altgdmin,
+    topology="none", comm="central", decentralized=False))
+
+register_solver(SolverDef(
+    name="dgd_altgdmin", fn=_alg.dgd_altgdmin,
+    topology="adj", comm="neighbor"))

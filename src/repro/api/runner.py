@@ -1,0 +1,201 @@
+"""``run_experiment(spec, key) -> Trace`` — the one entry point.
+
+Materializes the spec (problem → node view → graph/weights → spectral
+init → η), dispatches to the registered solver on the chosen substrate,
+and returns a :class:`Trace` carrying the per-iteration metrics, the
+final iterates, the resolved η, and the comm-model wall-clock axis so
+figure code stops recomputing it.
+
+Substrates:
+
+  * ``"simulator"`` — the single-host node-batched simulator
+    (:mod:`repro.core.altgdmin`), any topology/solver;
+  * ``"mesh"``      — the shard_map runtime (one node per device,
+    AGREE = collective-permute ring gossip).  Requires a mesh-capable
+    solver, circulant weights, and L = available devices; the min-B and
+    gradient phases route through the same :class:`AltgdminEngine`
+    backend as the simulator, so ``pallas``/``pallas-interpret`` reach
+    hardware nodes.
+
+Determinism: the problem and init keys are derived from the caller's
+``key`` by ``fold_in``, so two specs that share problem/topology/init
+sub-specs (e.g. the four solvers of one figure cell) see identical data,
+graphs, and starting bases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import SolverDef, get_solver
+from repro.api.spec import ExperimentSpec
+from repro.core import comm_model as _cm
+from repro.core.altgdmin import RunResult, resolve_eta
+from repro.core.problem import (MTRLProblem, generate_problem, node_view,
+                                split_samples)
+from repro.core.spectral import SpectralInit, decentralized_spectral_init
+from repro.distributed.graphs import Graph
+from repro.utils.compat import make_mesh
+
+
+_COMM_MODELS = {"ethernet-1gbps": _cm.ETHERNET_1GBPS,
+                "tpu-ici": _cm.TPU_ICI}
+
+
+@dataclasses.dataclass(frozen=True)
+class Materialized:
+    """The spec's liturgy, executed: everything a solver call needs."""
+    problem: MTRLProblem
+    Xg: jax.Array
+    yg: jax.Array
+    graph: Graph
+    W: jax.Array
+    adj: jax.Array
+    init: SpectralInit
+    eta: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """Result of one experiment run.
+
+    ``sd_max``/``sd_mean``/``spread`` are per-iteration (length T_GD);
+    ``time_axis`` is the cumulative emulated wall-clock under the spec's
+    comm model, priced by the solver's communication pattern (gossip /
+    neighbor / central) — the x-axis of the paper's Fig. 1 right panes.
+    """
+    spec: ExperimentSpec
+    U_nodes: jax.Array
+    B_nodes: jax.Array
+    sd_max: np.ndarray
+    sd_mean: np.ndarray
+    spread: np.ndarray
+    eta: float
+    time_axis: np.ndarray
+    materialized: Materialized
+
+    @property
+    def final_sd_max(self) -> float:
+        return float(self.sd_max[-1])
+
+
+def _as_key(key: Union[jax.Array, int, None]) -> jax.Array:
+    if key is None:
+        return jax.random.PRNGKey(0)
+    if isinstance(key, int):
+        return jax.random.PRNGKey(key)
+    return key
+
+
+def materialize(spec: ExperimentSpec, key=None) -> Materialized:
+    """Run the setup liturgy for a spec: generate the problem, build the
+    topology, run the spectral init, resolve η."""
+    key = _as_key(key)
+    p = spec.problem
+    dtype = jnp.dtype(p.dtype)
+    prob = generate_problem(jax.random.fold_in(key, 0), d=p.d, T=p.T, r=p.r,
+                            n=p.n, L=p.L, kappa=p.kappa,
+                            noise_std=p.noise_std, dtype=dtype)
+    # the init sees the full unsplit data (Algorithm 2 precedes the
+    # fold partition of Algorithm 3 line 4)
+    Xg_init, yg_init = node_view(prob)
+    if p.n_folds > 1:
+        prob = split_samples(prob, p.n_folds)
+    Xg, yg = node_view(prob)
+    graph = spec.topology.build_graph(p.L)
+    W = jnp.asarray(spec.topology.build_weights(p.L, graph), dtype)
+    adj = jnp.asarray(graph.adj, dtype)
+    init = decentralized_spectral_init(
+        jax.random.fold_in(key, 1), Xg_init, yg_init, W, kappa=prob.kappa,
+        mu=prob.mu, r=p.r, T_pm=spec.init.T_pm, T_con=spec.init.T_con,
+        broadcast=spec.init.broadcast)
+    eta = _resolve_spec_eta(spec, init)
+    return Materialized(problem=prob, Xg=Xg, yg=yg, graph=graph, W=W,
+                        adj=adj, init=init, eta=eta)
+
+
+def _resolve_spec_eta(spec: ExperimentSpec, init) -> float:
+    return resolve_eta(spec.solver.eta, spec.problem.n, R_diag=init.R_diag,
+                       L=spec.problem.L, c_eta=spec.solver.c_eta)
+
+
+def comm_time_axis(spec: ExperimentSpec, solver: SolverDef,
+                   graph: Graph) -> np.ndarray:
+    """Cumulative emulated wall-clock per outer iteration for the
+    solver's communication pattern under the spec's network model."""
+    p, c = spec.problem, spec.comm
+    model = _COMM_MODELS[c.model]
+    if solver.comm == "central":
+        return _cm.centralized_time_axis(
+            spec.solver.T_GD, p.d, p.r, p.L, c.compute_s_per_iter,
+            model=model, seed=c.seed)
+    t_con = spec.solver.T_con if solver.comm == "gossip" else 1
+    return _cm.decentralized_time_axis(
+        spec.solver.T_GD, t_con, p.d, p.r, graph.max_degree,
+        c.compute_s_per_iter, model=model, seed=c.seed)
+
+
+def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
+                   materialized: Materialized | None = None) -> Trace:
+    """Materialize ``spec`` and run it end to end.
+
+    ``engine`` optionally injects a pre-built :class:`AltgdminEngine`
+    (must agree with ``spec.engine.backend`` if both are given);
+    otherwise one is constructed from the spec.
+
+    ``materialized`` optionally reuses an earlier :func:`materialize`
+    result — the sweep-driver path, where the four solvers of one figure
+    cell share problem/topology/init and should not pay the setup (data
+    generation + T_pm power iterations) four times.  The caller must
+    pass a materialization of a spec sharing this spec's problem /
+    topology / init sub-specs and key; η is re-resolved from this spec's
+    SolverSpec either way.
+    """
+    from repro.core.engine import resolve_engine
+    solver = get_solver(spec.solver.name)
+    mat = materialize(spec, key) if materialized is None else materialized
+    eta = _resolve_spec_eta(spec, mat.init)
+    eng = resolve_engine(engine, spec.engine.backend,
+                         blk_d=spec.engine.blk_d)
+    if spec.substrate == "mesh":
+        result = _run_mesh(spec, solver, mat, eng, eta)
+    else:
+        result = solver.call(mat.init.U0, mat.Xg, mat.yg, mat.W, mat.adj,
+                             eta=eta, T_GD=spec.solver.T_GD,
+                             T_con=spec.solver.T_con,
+                             U_star=mat.problem.U_star, engine=eng)
+    return Trace(spec=spec, U_nodes=result.U_nodes, B_nodes=result.B_nodes,
+                 sd_max=np.asarray(result.sd_max),
+                 sd_mean=np.asarray(result.sd_mean),
+                 spread=np.asarray(result.spread), eta=result.eta,
+                 time_axis=comm_time_axis(spec, solver, mat.graph),
+                 materialized=mat)
+
+
+def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
+              eng, eta: float) -> RunResult:
+    topo, p = spec.topology, spec.problem
+    if not solver.mesh_capable:
+        raise ValueError(f"solver {solver.name!r} has no mesh runtime; "
+                         f"use substrate='simulator'")
+    if topo.weights != "circulant":
+        raise ValueError(
+            f"substrate='mesh' gossips with collective-permutes, which "
+            f"implement circulant weights only (got {topo.weights!r})")
+    if p.n_folds > 1:
+        raise ValueError("substrate='mesh' does not support sample "
+                         "splitting (n_folds > 1)")
+    n_dev = jax.device_count()
+    if p.L != n_dev:
+        raise ValueError(f"substrate='mesh' needs one device per node: "
+                         f"L={p.L} but {n_dev} devices are available")
+    mesh = make_mesh((p.L,), ("nodes",))
+    return solver.mesh_fn(
+        mat.init.U0, mat.Xg, mat.yg, mesh, "nodes", eta=eta,
+        T_GD=spec.solver.T_GD, T_con=spec.solver.T_con,
+        shifts=topo.shifts, self_weight=topo.self_weight,
+        engine=eng, U_star=mat.problem.U_star)

@@ -1,0 +1,240 @@
+"""Declarative experiment specs — the single description of a Dec-MTRL run.
+
+An :class:`ExperimentSpec` replaces the hand-wired six-step liturgy
+(``generate_problem → node_view → graph/weights → spectral_init →
+resolve_eta → algorithm(...)``) with one nested frozen dataclass that a
+sweep driver can build, mutate with :func:`dataclasses.replace`, and
+serialize losslessly to JSON (``to_dict``/``from_dict``).  Every field is
+a plain int/float/str/tuple so a spec is hashable, diffable, and exactly
+round-trippable — the property the benchmark harness relies on to key
+result rows by spec.
+
+The five sub-specs mirror the liturgy's stages:
+
+  * :class:`ProblemSpec`  — the synthetic Dec-MTRL instance (paper Sec. II);
+  * :class:`TopologySpec` — graph family + mixing-weight scheme (Sec. III);
+  * :class:`InitSpec`     — Algorithm 2's spectral initialization;
+  * :class:`SolverSpec`   — which algorithm, η (None = Theorem-1 auto),
+                            T_GD and the solver's own T_con;
+  * :class:`EngineSpec`   — kernel backend for the iteration engine;
+
+plus ``substrate`` selecting the single-host simulator or the shard_map
+mesh runtime, and :class:`CommSpec` for the emulated wall-clock axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.distributed import graphs as _graphs
+from repro.distributed import mixing as _mixing
+
+
+GRAPH_FAMILIES = ("erdos_renyi", "ring", "path", "torus2d", "hypercube",
+                  "complete", "star", "circulant")
+WEIGHT_SCHEMES = ("metropolis", "equal_neighbor", "lazy", "circulant")
+SUBSTRATES = ("simulator", "mesh")
+COMM_MODELS = ("ethernet-1gbps", "tpu-ici")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """The synthetic multi-task linear-regression instance (paper Sec. II)."""
+    d: int = 100            # feature dimension
+    T: int = 64             # tasks (L must divide T)
+    r: int = 4              # subspace rank
+    n: int = 30             # samples per task
+    L: int = 8              # nodes
+    kappa: float = 1.0      # condition number of Σ*
+    noise_std: float = 0.0
+    dtype: str = "float64"
+    n_folds: int = 0        # >1 → Algorithm 3 sample splitting
+
+    def __post_init__(self):
+        if self.T % self.L:
+            raise ValueError(f"L must divide T, got T={self.T}, L={self.L}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Graph family + mixing-weight scheme.
+
+    ``family`` fields are union-style: ``p``/``seed`` apply to
+    ``erdos_renyi``, ``rows``/``cols`` to ``torus2d``, ``dim`` to
+    ``hypercube``; the rest need only L (taken from the problem).
+    ``weights="circulant"`` is the mesh-native scheme (each shift = one
+    collective-permute) and the only one the mesh substrate accepts.
+    """
+    family: str = "erdos_renyi"
+    p: float = 0.5
+    seed: int = 0
+    rows: int = 0
+    cols: int = 0
+    dim: int = 0
+    weights: str = "metropolis"
+    beta: float = 0.5                      # lazy weights
+    shifts: tuple = (-1, 1)                # circulant weights
+    self_weight: Optional[float] = None    # circulant weights
+
+    def __post_init__(self):
+        if self.family not in GRAPH_FAMILIES:
+            raise ValueError(f"unknown graph family {self.family!r}; "
+                             f"expected one of {GRAPH_FAMILIES}")
+        if self.weights not in WEIGHT_SCHEMES:
+            raise ValueError(f"unknown weight scheme {self.weights!r}; "
+                             f"expected one of {WEIGHT_SCHEMES}")
+        # JSON round-trips tuples as lists; normalize back.
+        object.__setattr__(self, "shifts", tuple(self.shifts))
+        # Circulant weights gossip over the circulant graph of `shifts`;
+        # reject family/weights combinations that would make the stored
+        # graph and the mixing matrix describe different topologies.
+        if self.weights == "circulant":
+            if self.family == "ring" and set(self.shifts) != {-1, 1}:
+                raise ValueError(
+                    f"family='ring' is the circulant graph of shifts "
+                    f"(-1, 1); got shifts={self.shifts} — use "
+                    f"family='circulant'")
+            if self.family not in ("ring", "circulant"):
+                raise ValueError(
+                    f"weights='circulant' mixes over the circulant graph "
+                    f"of its shifts; family={self.family!r} would "
+                    f"disagree — use family='ring' or 'circulant'")
+
+    def build_graph(self, L: int) -> _graphs.Graph:
+        if self.family == "erdos_renyi":
+            return _graphs.erdos_renyi(L, self.p, seed=self.seed)
+        if self.family == "ring":
+            return _graphs.ring(L)
+        if self.family == "path":
+            return _graphs.path_graph(L)
+        if self.family == "torus2d":
+            if self.rows * self.cols != L:
+                raise ValueError(f"torus2d rows*cols={self.rows * self.cols} "
+                                 f"!= L={L}")
+            return _graphs.torus2d(self.rows, self.cols)
+        if self.family == "hypercube":
+            if (1 << self.dim) != L:
+                raise ValueError(f"hypercube 2^dim={1 << self.dim} != L={L}")
+            return _graphs.hypercube(self.dim)
+        if self.family == "complete":
+            return _graphs.complete(L)
+        if self.family == "circulant":
+            return _graphs.circulant(L, self.shifts)
+        return _graphs.star(L)
+
+    def build_weights(self, L: int,
+                      graph: _graphs.Graph | None = None) -> np.ndarray:
+        """The (L, L) mixing matrix W for the AGREE protocol."""
+        if self.weights == "circulant":
+            return _mixing.circulant_weights(L, self.shifts, self.self_weight)
+        g = graph if graph is not None else self.build_graph(L)
+        if self.weights == "metropolis":
+            return _mixing.metropolis_weights(g)
+        if self.weights == "equal_neighbor":
+            return _mixing.equal_neighbor_weights(g)
+        return _mixing.lazy_weights(g, self.beta)
+
+
+@dataclasses.dataclass(frozen=True)
+class InitSpec:
+    """Algorithm 2 — decentralized truncated spectral initialization."""
+    T_pm: int = 30          # power-method iterations
+    T_con: int = 10         # AGREE rounds inside the init
+    broadcast: bool = True  # paper lines 14-15 (node-0 basis broadcast)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Which algorithm, with its step size and iteration budget.
+
+    ``eta=None`` resolves via Theorem 1's η = c_η/(n σ*max²), estimating
+    σ*max from the spectral init's R diagonal (the paper's recipe).
+    """
+    name: str = "dif_altgdmin"
+    T_GD: int = 250
+    T_con: int = 10
+    eta: Optional[float] = None
+    c_eta: float = 0.4
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Iteration-engine backend (see :mod:`repro.core.engine`);
+    ``backend=None`` → env/auto selection (xla-ref off-TPU)."""
+    backend: Optional[str] = None
+    blk_d: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Network model for the emulated wall-clock axis (paper Sec. V)."""
+    model: str = "ethernet-1gbps"
+    compute_s_per_iter: float = 1e-3
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.model not in COMM_MODELS:
+            raise ValueError(f"unknown comm model {self.model!r}; "
+                             f"expected one of {COMM_MODELS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One fully-specified Dec-MTRL experiment cell."""
+    problem: ProblemSpec = ProblemSpec()
+    topology: TopologySpec = TopologySpec()
+    init: InitSpec = InitSpec()
+    solver: SolverSpec = SolverSpec()
+    engine: EngineSpec = EngineSpec()
+    comm: CommSpec = CommSpec()
+    substrate: str = "simulator"
+    name: str = ""
+
+    def __post_init__(self):
+        if self.substrate not in SUBSTRATES:
+            raise ValueError(f"unknown substrate {self.substrate!r}; "
+                             f"expected one of {SUBSTRATES}")
+
+    # ------------------------------------------------- JSON round-trip
+
+    def to_dict(self) -> dict:
+        """Plain-JSON-types dict (tuples become lists)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: dict) -> "ExperimentSpec":
+        return _from_dict(cls, data)
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+
+def _from_dict(cls, data):
+    """Reconstruct a (nested) spec dataclass, rejecting unknown keys so a
+    mistyped sweep field fails loudly instead of silently defaulting."""
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = set(data) - set(fields)
+    if unknown:
+        raise ValueError(f"{cls.__name__}: unknown field(s) {sorted(unknown)}")
+    kwargs = {}
+    for key, value in data.items():
+        sub = _SUBSPEC_TYPES.get((cls, key))
+        kwargs[key] = _from_dict(sub, value) if sub is not None else value
+    return cls(**kwargs)
+
+
+_SUBSPEC_TYPES = {
+    (ExperimentSpec, "problem"): ProblemSpec,
+    (ExperimentSpec, "topology"): TopologySpec,
+    (ExperimentSpec, "init"): InitSpec,
+    (ExperimentSpec, "solver"): SolverSpec,
+    (ExperimentSpec, "engine"): EngineSpec,
+    (ExperimentSpec, "comm"): CommSpec,
+}

@@ -7,12 +7,12 @@ from repro.core.metrics import (
     subspace_distance, subspace_distance_F, task_error, consensus_spread,
 )
 from repro.core.agree import agree
-from repro.core.spectral import decentralized_spectral_init
+from repro.core.spectral import decentralized_spectral_init, SpectralInit
 from repro.core.altgdmin import (
     dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
-    minimize_B, grad_U, RunResult,
+    minimize_B, grad_U, RunResult, resolve_eta,
 )
-from repro.core.engine import AltgdminEngine
+from repro.core.engine import AltgdminEngine, resolve_engine
 from repro.core import theory
 from repro.core import comm_model
 from repro.core.runtime import dif_altgdmin_mesh

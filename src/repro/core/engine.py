@@ -143,17 +143,32 @@ class AltgdminEngine:
         if not self.fused:
             return lambda Z: agree(Z, W, T_con)
         Wp = jnp.linalg.matrix_power(W.astype(jnp.float32), T_con)
-        return lambda Z: ops.mix_nodes(Z, Wp, backend=self.backend
-                                       ).astype(Z.dtype)
+
+        def mix(Z):
+            if Z.dtype == jnp.float64:
+                # The fused combine kernel accumulates in f32; x64 runs
+                # keep the exact sequential AGREE so double precision is
+                # not silently truncated in the consensus phase.
+                return agree(Z, W, T_con)
+            return ops.mix_nodes(Z, Wp, backend=self.backend
+                                 ).astype(Z.dtype)
+        return mix
 
     def make_neighbor_mixer(self, M):
         """DGD's row-stochastic neighbour average Z ↦ M Z (single round,
         no self weight — M comes in precomputed)."""
+        def ref_mix(Z):
+            return jnp.einsum("gh,h...->g...", M.astype(Z.dtype), Z)
+
         if not self.fused:
-            return lambda Z: jnp.einsum("gh,h...->g...", M.astype(Z.dtype),
-                                        Z)
-        return lambda Z: ops.mix_nodes(Z, M.astype(jnp.float32),
-                                       backend=self.backend).astype(Z.dtype)
+            return ref_mix
+
+        def mix(Z):
+            if Z.dtype == jnp.float64:   # same x64 policy as make_mixer
+                return ref_mix(Z)
+            return ops.mix_nodes(Z, M.astype(jnp.float32),
+                                 backend=self.backend).astype(Z.dtype)
+        return mix
 
 
 def resolve_engine(engine=None, backend: str | None = None,

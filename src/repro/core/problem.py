@@ -8,7 +8,6 @@ evenly over L nodes (the decentralized setting).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,17 +10,31 @@ with a local QR.  Numerically identical to the simulator run with the
 circulant ring W (tests/test_runtime_mesh.py), so every Theorem-1
 guarantee transfers with γ(W) = γ(ring).
 
+The min-B and gradient phases route through the same
+:class:`repro.core.engine.AltgdminEngine` as the simulator (``engine=``/
+``backend=`` kwargs): ``xla-ref`` reproduces the seed einsum numerics,
+``pallas``/``pallas-interpret`` run the fused node-batched kernel on each
+device — the hardware nodes get the fused production path.  Only the
+gossip stays runtime-specific (collective-permutes instead of the
+simulator's dense ``W`` products).
+
 The federated property is structural: only Ŭ_g (d×r) crosses the wire;
 X_g, y_g, B_g never leave the device.
+
+Pass ``U_star`` to additionally record the simulator's per-iteration
+metrics (sd_max / sd_mean / consensus spread, via one all-gather of the
+d×r iterate per iteration) and get a full :class:`RunResult` back;
+without it the return is the legacy ``(U_nodes, B_nodes)`` pair and no
+extra collective runs.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.engine import AltgdminEngine, resolve_engine
+from repro.core.metrics import consensus_spread, subspace_distance
 from repro.core.spectral import _qr_pos
 from repro.distributed.gossip import ring_weights
 from repro.utils.compat import shard_map as _shard_map
@@ -28,28 +42,35 @@ from repro.utils.compat import shard_map as _shard_map
 
 def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                       T_GD: int, T_con: int,
-                      shifts=(-1, 1), self_weight=None):
+                      shifts=(-1, 1), self_weight=None,
+                      engine: AltgdminEngine | None = None,
+                      backend: str | None = None, U_star=None):
     """U0: (L, d, r); Xg: (L, tpn, n, d); yg: (L, tpn, n) — leading axis
     sharded over ``axis_name`` (L = mesh axis size: one node per device).
-    Returns (U_nodes, B_nodes) with the same layouts."""
+    Returns (U_nodes, B_nodes) with the same layouts, or a
+    :class:`~repro.core.altgdmin.RunResult` when ``U_star`` is given."""
+    from repro.core.altgdmin import RunResult
+
     L = mesh.shape[axis_name]
     if U0.shape[0] != L:
         raise ValueError(f"need one node per device: L={U0.shape[0]} vs "
                          f"mesh axis {L}")
     sw, wn = ring_weights(shifts, self_weight)
     eta_L = eta * L
+    eng = resolve_engine(engine, backend)
+    with_metrics = U_star is not None
 
     def local_min_B(U, X, y):
-        """b_t = (X_t U)† y_t for the device's tasks. X: (tpn, n, d)."""
-        A = jnp.einsum("tnd,dr->tnr", X, U)
-        G = jnp.einsum("tnr,tns->trs", A, A)
-        c = jnp.einsum("tnr,tn->tr", A, y)
-        return jax.vmap(lambda g, ci: jax.scipy.linalg.solve(
-            g, ci, assume_a="pos"))(G, c)
+        """b_t = (X_t U)† y_t for the device's tasks, through the engine
+        (node-batch of one). X: (tpn, n, d)."""
+        return eng.minimize_B(U[None], X[None], y[None])[0]
 
-    def local_grad(U, B, X, y):
-        resid = jnp.einsum("tnd,dr,tr->tn", X, U, B) - y
-        return jnp.einsum("tnd,tn,tr->dr", X, resid, B)
+    def local_min_grad(U, X, y):
+        """Fused min-B + gradient — ONE kernel dispatch per device per
+        iteration on the pallas backends."""
+        B, G = eng.min_grad(U[None], X[None], y[None], X[None], y[None],
+                            same_data=True)
+        return B[0], G[0]
 
     def gossip(z):
         def round_(carry, _):
@@ -61,25 +82,42 @@ def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
         out, _ = jax.lax.scan(round_, z, None, length=T_con)
         return out
 
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
-        out_specs=(P(axis_name), P(axis_name)),
-        axis_names={axis_name})
-    def run(U0, Xg, yg):
+    def body(U0, Xg, yg, U_star):
         U = U0[0]                       # this device's node
         X, y = Xg[0], yg[0]
 
         def step(U, _):
-            B = local_min_B(U, X, y)
-            G = local_grad(U, B, X, y)
+            _, G = local_min_grad(U, X, y)
             U_breve = U - eta_L * G                  # local adapt
             U_tilde = gossip(U_breve)                # combine (diffusion)
             U_new, _ = _qr_pos(U_tilde)              # projection
-            return U_new, None
+            if not with_metrics:
+                return U_new, None
+            U_all = jax.lax.all_gather(U_new, axis_name)     # (L, d, r)
+            return U_new, (subspace_distance(U_new, U_star),
+                           consensus_spread(U_all))
 
-        U_fin, _ = jax.lax.scan(step, U, None, length=T_GD)
+        U_fin, metrics = jax.lax.scan(step, U, None, length=T_GD)
         B_fin = local_min_B(U_fin, X, y)
-        return U_fin[None], B_fin[None]
+        if not with_metrics:
+            return U_fin[None], B_fin[None]
+        sd, spread = metrics
+        return U_fin[None], B_fin[None], sd[None], spread[None]
 
-    return run(U0, Xg, yg)
+    sharded = P(axis_name)
+    out_specs = ((sharded,) * 4) if with_metrics else (sharded, sharded)
+    run = _shard_map(body, mesh=mesh,
+                     in_specs=(sharded, sharded, sharded, P()),
+                     out_specs=out_specs,
+                     axis_names={axis_name},
+                     check_rep=not eng.fused)
+
+    U_dummy = U0[0] if U_star is None else U_star
+    out = run(U0, Xg, yg, U_dummy)
+    if not with_metrics:
+        return out
+    U_fin, B_fin, sd, spread = out          # sd/spread: (L, T_GD)
+    return RunResult(U_nodes=U_fin, B_nodes=B_fin,
+                     sd_max=jnp.max(sd, axis=0),
+                     sd_mean=jnp.mean(sd, axis=0),
+                     spread=spread[0], eta=eta)

@@ -13,11 +13,10 @@ Two kinds of data feed this framework:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.frontends import vlm_batch_stub
 

@@ -1,5 +1,6 @@
 from repro.distributed.graphs import (
-    Graph, erdos_renyi, ring, torus2d, hypercube, complete, star, path_graph,
+    Graph, erdos_renyi, ring, torus2d, hypercube, complete, star,
+    path_graph, circulant,
 )
 from repro.distributed.mixing import (
     metropolis_weights, equal_neighbor_weights, lazy_weights, gamma,

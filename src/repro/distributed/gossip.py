@@ -24,7 +24,6 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.utils.compat import shard_map as _shard_map
 

@@ -80,6 +80,20 @@ def erdos_renyi(L: int, p: float, seed: int = 0,
     return Graph(a.astype(np.int8))
 
 
+def circulant(L: int, shifts: tuple[int, ...] = (-1, 1)) -> Graph:
+    """Circulant graph: node i adjacent to i+s (mod L) for each shift —
+    the topology a circulant mixing matrix actually gossips over (each
+    shift = one collective-permute on the mesh runtime)."""
+    a = np.zeros((L, L), dtype=np.int8)
+    for i in range(L):
+        for s in shifts:
+            j = (i + s) % L
+            if i != j:
+                a[i, j] = 1
+                a[j, i] = 1
+    return Graph(a)
+
+
 def ring(L: int) -> Graph:
     a = np.zeros((L, L), dtype=np.int8)
     if L == 1:

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch import steps as steps_lib
 from repro.models import init_params, init_cache, decode_step
 from repro.utils.log import get_logger
 

@@ -5,7 +5,6 @@ allocated (the dry-run lowers against these).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax

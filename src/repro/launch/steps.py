@@ -13,7 +13,6 @@ forward; decode is one token against a KV/SSM cache.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -13,7 +13,7 @@ The softmax core has two jnp implementations:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

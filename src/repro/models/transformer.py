@@ -22,8 +22,7 @@ Modality handling (stub frontends per DESIGN.md carve-out):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

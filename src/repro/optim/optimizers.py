@@ -11,7 +11,7 @@ counter lives inside the optimizer state.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,8 @@ def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
     """AdamW with f32 moments (params may be lower precision)."""
     def init(params):
-        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        def z(p):
+            return jnp.zeros_like(p, jnp.float32)
         return {"step": jnp.zeros((), jnp.int32),
                 "m": jax.tree.map(z, params),
                 "v": jax.tree.map(z, params)}

@@ -26,17 +26,25 @@ def make_mesh(shape, axis_names):
     return jax.make_mesh(shape, axis_names)
 
 
-def shard_map(f=None, *, mesh, in_specs, out_specs, axis_names=None):
+def shard_map(f=None, *, mesh, in_specs, out_specs, axis_names=None,
+              check_rep=True):
     """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (0.4.x).
 
     ``axis_names`` is accepted for parity with the new API and dropped on
-    0.4.x, where every mesh axis is implicitly named inside the body."""
+    0.4.x, where every mesh axis is implicitly named inside the body.
+    ``check_rep=False`` disables the replication checker, which has no
+    rule for ``pallas_call`` — required whenever the body dispatches a
+    Pallas kernel (the engine-routed mesh runtime)."""
     if f is None:
         return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, axis_names=axis_names)
+                                 out_specs=out_specs, axis_names=axis_names,
+                                 check_rep=check_rep)
     if hasattr(jax, "shard_map"):
         kw = {} if axis_names is None else {"axis_names": axis_names}
+        if not check_rep:
+            kw["check_vma"] = False
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, **kw)
     from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep)

@@ -1,16 +1,20 @@
 """Fused node-batched AltGDmin engine: backend registry semantics, parity
 of every backend against the pure-jnp oracles (dtypes, padding, tpn=1),
-identical sd_max trajectories across backends for all four algorithms,
-and the structural FLOP guarantee — the fused kernel streams A = X_t U
-exactly once per task (the unfused pair builds it twice)."""
+identical sd_max trajectories across backends for all four algorithms
+(driven through the declarative API), and the structural FLOP guarantee —
+the fused kernel streams A = X_t U exactly once per task (the unfused
+pair builds it twice)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import generate_problem, node_view, decentralized_spectral_init
-from repro.core.altgdmin import (centralized_altgdmin, dec_altgdmin,
-                                 dgd_altgdmin, dif_altgdmin, resolve_eta)
+from repro.api import (EngineSpec, ExperimentSpec, InitSpec, ProblemSpec,
+                       SolverSpec, TopologySpec, run_experiment,
+                       solver_names)
+from repro.core import dif_altgdmin
 from repro.core.engine import (AltgdminEngine, default_engine_backend,
                                resolve_engine)
 from repro.distributed import circulant_weights
@@ -189,63 +193,54 @@ def test_fused_kernel_builds_A_exactly_once():
 
 # ------------------------------------------------- trajectory parity
 
-@pytest.fixture(scope="module")
-def mtrl():
-    L = 6
-    prob = generate_problem(jax.random.PRNGKey(0), d=60, T=24, r=3, n=25,
-                            L=L, kappa=1.5)
-    Xg, yg = node_view(prob)
-    W = jnp.asarray(circulant_weights(L, (-1, 1)))
-    init = decentralized_spectral_init(
-        jax.random.PRNGKey(1), Xg, yg, W, kappa=prob.kappa, mu=prob.mu,
-        r=prob.r, T_pm=20, T_con=8)
-    eta = resolve_eta(None, prob.n, R_diag=init.R_diag, L=L)
-    adj = (W > 0).astype(jnp.float32) - jnp.eye(L, dtype=jnp.float32)
-    return dict(prob=prob, Xg=Xg, yg=yg, W=W, init=init, eta=eta, adj=adj)
+API_SPEC = ExperimentSpec(
+    problem=ProblemSpec(d=60, T=24, r=3, n=25, L=6, kappa=1.5),
+    topology=TopologySpec(family="ring", weights="circulant"),
+    init=InitSpec(T_pm=20, T_con=8),
+    solver=SolverSpec(name="dif_altgdmin", T_GD=50, T_con=3))
 
 
-@pytest.mark.parametrize("algo", ["dif", "dec", "cen", "dgd"])
-def test_all_algorithms_trajectory_parity(mtrl, algo):
+def _with(spec, *, solver=None, backend=None, **solver_kw):
+    if solver is not None or solver_kw:
+        spec = dataclasses.replace(
+            spec, solver=dataclasses.replace(
+                spec.solver, **({"name": solver} if solver else {}),
+                **solver_kw))
+    if backend is not None:
+        spec = dataclasses.replace(spec, engine=EngineSpec(backend=backend))
+    return spec
+
+
+@pytest.mark.parametrize("algo", sorted(solver_names()))
+def test_all_algorithms_trajectory_parity(algo):
     """Acceptance: identical sd_max trajectories on xla-ref vs fused
-    backends (rtol=1e-4) for all four algorithms."""
-    s = mtrl
-    kw = dict(eta=s["eta"], T_GD=50, U_star=s["prob"].U_star)
-
-    def run(backend):
-        if algo == "dif":
-            return dif_altgdmin(s["init"].U0, s["Xg"], s["yg"], s["W"],
-                                T_con=3, backend=backend, **kw)
-        if algo == "dec":
-            return dec_altgdmin(s["init"].U0, s["Xg"], s["yg"], s["W"],
-                                T_con=3, backend=backend, **kw)
-        if algo == "cen":
-            return centralized_altgdmin(s["init"].U0[0], s["Xg"], s["yg"],
-                                        backend=backend, **kw)
-        return dgd_altgdmin(s["init"].U0, s["Xg"], s["yg"], s["adj"],
-                            backend=backend, **kw)
-
-    a = run("xla-ref")
-    b = run("pallas-interpret")
-    np.testing.assert_allclose(np.asarray(a.sd_max), np.asarray(b.sd_max),
-                               rtol=1e-4, atol=1e-5)
+    backends (rtol=1e-4) for every registered solver, driven through
+    the declarative API."""
+    a = run_experiment(_with(API_SPEC, solver=algo, backend="xla-ref"),
+                       key=0)
+    b = run_experiment(_with(API_SPEC, solver=algo,
+                             backend="pallas-interpret"), key=0)
+    np.testing.assert_allclose(a.sd_max, b.sd_max, rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(a.B_nodes, np.float32),
                                np.asarray(b.B_nodes, np.float32),
                                rtol=1e-3, atol=1e-4)
 
 
-def test_engine_xla_ref_is_bit_identical_to_seed_path(mtrl):
+def test_engine_xla_ref_is_bit_identical_to_seed_path():
     """The xla-ref engine IS the seed code path — same arrays out, no
-    tolerance."""
-    s = mtrl
-    res = dif_altgdmin(s["init"].U0, s["Xg"], s["yg"], s["W"], T_con=2,
-                       eta=s["eta"], T_GD=10, U_star=s["prob"].U_star,
-                       backend="xla-ref")
-    eng = AltgdminEngine("xla-ref")
-    res2 = dif_altgdmin(s["init"].U0, s["Xg"], s["yg"], s["W"], T_con=2,
-                        eta=s["eta"], T_GD=10, U_star=s["prob"].U_star,
-                        engine=eng)
+    tolerance — whether selected via the spec or injected pre-built."""
+    spec = _with(API_SPEC, T_GD=10, T_con=2, backend="xla-ref")
+    res = run_experiment(spec, key=0)
+    res2 = run_experiment(spec, key=0, engine=AltgdminEngine("xla-ref"))
     np.testing.assert_array_equal(np.asarray(res.U_nodes),
                                   np.asarray(res2.U_nodes))
+    # and the legacy driver with the same materialized pieces agrees
+    m = res.materialized
+    legacy = dif_altgdmin(m.init.U0, m.Xg, m.yg, m.W, T_con=2, eta=m.eta,
+                          T_GD=10, U_star=m.problem.U_star,
+                          backend="xla-ref")
+    np.testing.assert_array_equal(np.asarray(res.U_nodes),
+                                  np.asarray(legacy.U_nodes))
 
 
 def test_sample_split_fold_path_runs_fused():

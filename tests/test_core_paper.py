@@ -15,8 +15,8 @@ from repro.core import (
     dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
     subspace_distance, task_error, theory,
 )
-from repro.core.altgdmin import resolve_eta, minimize_B, theta_nodes
-from repro.distributed import erdos_renyi, metropolis_weights, gamma
+from repro.core.altgdmin import resolve_eta, theta_nodes
+from repro.distributed import erdos_renyi, metropolis_weights
 
 
 @pytest.fixture(scope="module")

@@ -1,14 +1,12 @@
 """Launch-layer unit tests (no fake-device mesh needed): sharding rules,
 shape admissibility, input-spec assembly, HLO collective parser."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.sharding import param_spec_for, param_specs, cache_specs
-from repro.launch.shapes import (SHAPES, get_shape, long_ctx_variant,
-                                 cache_capacity)
+from repro.launch.shapes import get_shape, long_ctx_variant, cache_capacity
 from repro.launch.specs import abstract_params, batch_struct
 from repro.utils.hlo import collective_stats, dominant_collective
 

@@ -1,5 +1,4 @@
 """optim / data / checkpoint substrate tests (incl. hypothesis properties)."""
-import os
 
 import jax
 import jax.numpy as jnp
