@@ -113,6 +113,60 @@ def bench_altgdmin_engine(quick: bool = False):
     return rows
 
 
+# ------------------------------------------------- consensus combine
+
+# Per-node gossip operand is the d×r subspace iterate; K = ring degree.
+CONSENSUS_SHAPES = (
+    dict(shape="paper_dxr", d=600, r=4, K=2),       # paper Experiment 1
+    dict(shape="large_dxr", d=4096, r=16, K=4),     # production-ish torus
+)
+
+
+def bench_consensus(quick: bool = False, t_con: int = 3):
+    """µs per gossip round of the mesh runtime's combine phase: the
+    fused K+1-way ``gossip_combine`` kernel (ONE dispatch per round)
+    vs the unfused weighted-sum chain (K separate axpy sweeps — the
+    pre-consensus-layer runtime path).  Neighbour blocks are held fixed
+    (the ppermute cost is identical for both variants and excluded);
+    interpret-mode timings are CPU validations, not TPU projections —
+    the dispatch count (1 vs K) is the trajectory metric."""
+    rows = []
+    key = jax.random.PRNGKey(0)
+    shapes = CONSENSUS_SHAPES[:1] if quick else CONSENSUS_SHAPES
+    for cfg in shapes:
+        d, r, K = cfg["d"], cfg["r"], cfg["K"]
+        z = jax.random.normal(key, (d, r), jnp.float32)
+        nbrs = jax.random.normal(jax.random.fold_in(key, 1), (K, d, r),
+                                 jnp.float32)
+        sw = 1.0 / (K + 1)
+        wn = (1.0 - sw) / K
+
+        @jax.jit
+        def fused_rounds(z, nbrs):
+            def body(carry, _):
+                return ops.gossip_combine(carry, nbrs, sw, wn,
+                                          backend="pallas-interpret"), None
+            return jax.lax.scan(body, z, None, length=t_con)[0]
+
+        @jax.jit
+        def chain_rounds(z, nbrs):
+            def body(carry, _):
+                acc = sw * carry
+                for k in range(K):
+                    acc = acc + wn * nbrs[k]
+                return acc, None
+            return jax.lax.scan(body, z, None, length=t_con)[0]
+
+        for variant, fn, dispatches in (
+                ("fused_gossip_combine", fused_rounds, 1),
+                ("unfused_chain", chain_rounds, K)):
+            us = _time(fn, z, nbrs, reps=2 if quick else 5) / t_con
+            rows.append(dict(cfg, variant=variant, t_con=t_con,
+                             combine_dispatches_per_round=dispatches,
+                             us_per_round=round(us, 1)))
+    return rows
+
+
 def bench_kernels():
     rows = []
     key = jax.random.PRNGKey(0)

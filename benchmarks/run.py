@@ -47,11 +47,14 @@ def main() -> None:
     from benchmarks.paper_figs import bench_fig1, bench_fig2
     from benchmarks.complexity import (bench_complexity_table,
                                        bench_trainer_comm)
-    from benchmarks.kernel_bench import bench_altgdmin_engine, bench_kernels
+    from benchmarks.kernel_bench import (bench_altgdmin_engine,
+                                         bench_consensus, bench_kernels)
 
     t0 = time.time()
     engine_rows = bench_altgdmin_engine(quick=args.quick)
     emit("altgdmin_engine", engine_rows, args.out)
+    consensus_rows = bench_consensus(quick=args.quick)
+    emit("consensus_combine", consensus_rows, args.out)
     bench_json = {
         "benchmark": "altgdmin_engine",
         "description": "fused node-batched AltGDmin iteration engine: "
@@ -61,6 +64,12 @@ def main() -> None:
                 "FLOPs are the hardware-independent trajectory metric",
         "quick": args.quick,
         "rows": engine_rows,
+        "consensus": {
+            "description": "mesh-runtime gossip combine, µs/round: the "
+                           "fused K+1-way gossip_combine dispatch vs "
+                           "the unfused K-sweep weighted-sum chain",
+            "rows": consensus_rows,
+        },
     }
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for path in (os.path.join(args.out, "BENCH_altgdmin.json"),

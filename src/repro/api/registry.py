@@ -1,4 +1,4 @@
-"""Solver registry — the four AltGDmin-family algorithms behind ONE call
+"""Solver registry — the AltGDmin-family algorithms behind ONE call
 convention.
 
 The legacy drivers in :mod:`repro.core.altgdmin` have mutually
@@ -6,11 +6,12 @@ inconsistent signatures (W vs adjacency vs no topology argument; stacked
 ``U0_nodes`` vs a single ``U0``).  A :class:`SolverDef` records those
 differences as data — which topology materialization the solver consumes
 (``"W"``/``"adj"``/``"none"``), whether it is decentralized, and which
-communication pattern prices its wall-clock axis — so
-:func:`repro.api.runner.run_experiment` can drive any registered solver
-identically.  ``register_solver`` is open: new algorithms (e.g. the
-combine-rule variants of Exact Subspace Diffusion) plug in without
-touching the runner.
+:class:`~repro.distributed.consensus.CombineRule` carries its
+communication (the rule's :class:`CommSignature` prices the wall-clock
+axis) — so :func:`repro.api.runner.run_experiment` can drive any
+registered solver identically.  ``register_solver`` is open: the
+combine-rule variants of Exact Subspace Diffusion and Beyond
+Centralization plug in below without touching the runner.
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ from typing import Callable
 
 from repro.core import altgdmin as _alg
 from repro.core import runtime as _runtime
+from repro.distributed.consensus import COMBINE_RULES, CommSignature, get_rule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,27 +30,42 @@ class SolverDef:
     ``fn`` is the legacy driver; ``call`` (below) adapts the uniform
     convention onto it.  ``topology`` names what the solver consumes:
     ``"W"`` (mixing matrix), ``"adj"`` (float adjacency), ``"none"``
-    (fusion center).  ``comm`` prices the wall-clock axis: ``"gossip"``
-    (T_con AGREE rounds/iter), ``"neighbor"`` (1 exchange/iter),
-    ``"central"`` (gather + broadcast/iter).  ``mesh_capable`` marks
-    solvers with a shard_map runtime.
+    (fusion center).  ``combine`` names the CombineRule that carries the
+    solver's communication; its signature prices the wall-clock axis
+    (gossip: T_con AGREE rounds/iter, neighbor: 1 exchange/iter,
+    central: gather + broadcast/iter).  ``mesh_capable`` marks solvers
+    with a shard_map runtime.  ``spec_kwargs`` lists extra SolverSpec
+    fields the driver consumes (forwarded by the runner, e.g.
+    ``local_steps`` for ``beyond_central``).
     """
     name: str
     fn: Callable
     topology: str = "W"             # "W" | "adj" | "none"
-    comm: str = "gossip"            # "gossip" | "neighbor" | "central"
+    combine: str = "gossip"         # CombineRule name (comm signature)
     decentralized: bool = True
     mesh_fn: Callable | None = None  # shard_map runtime, if one exists
+    spec_kwargs: tuple = ()          # extra SolverSpec fields fn takes
 
     @property
     def mesh_capable(self) -> bool:
         return self.mesh_fn is not None
 
+    @property
+    def comm(self) -> str:
+        """Legacy alias: the combine rule's pricing pattern."""
+        return self.signature(1).pattern
+
+    def signature(self, T_con: int) -> CommSignature:
+        """The solver's per-iteration communication signature."""
+        return get_rule(self.combine).signature(T_con)
+
     def call(self, U0_nodes, Xg, yg, W, adj, *, eta: float, T_GD: int,
-             T_con: int, U_star=None, engine=None) -> _alg.RunResult:
+             T_con: int, U_star=None, engine=None,
+             **extra) -> _alg.RunResult:
         """Uniform convention: stacked node-major inputs; the def routes
-        the topology the solver needs and drops what it ignores."""
-        kw = dict(eta=eta, T_GD=T_GD, U_star=U_star, engine=engine)
+        the topology the solver needs and drops what it ignores.
+        ``extra`` forwards the fields named in ``spec_kwargs``."""
+        kw = dict(eta=eta, T_GD=T_GD, U_star=U_star, engine=engine, **extra)
         if self.topology == "none":
             U0 = U0_nodes if self.decentralized else U0_nodes[0]
             return self.fn(U0, Xg, yg, **kw)
@@ -65,8 +82,9 @@ def register_solver(solver: SolverDef) -> SolverDef:
         raise ValueError(f"solver {solver.name!r} already registered")
     if solver.topology not in ("W", "adj", "none"):
         raise ValueError(f"bad topology kind {solver.topology!r}")
-    if solver.comm not in ("gossip", "neighbor", "central"):
-        raise ValueError(f"bad comm pattern {solver.comm!r}")
+    if solver.combine not in COMBINE_RULES:
+        raise ValueError(f"unknown combine rule {solver.combine!r}; "
+                         f"registered: {sorted(COMBINE_RULES)}")
     SOLVERS[solver.name] = solver
     return solver
 
@@ -85,16 +103,28 @@ def solver_names() -> tuple[str, ...]:
 
 register_solver(SolverDef(
     name="dif_altgdmin", fn=_alg.dif_altgdmin,
-    topology="W", comm="gossip", mesh_fn=_runtime.dif_altgdmin_mesh))
+    topology="W", combine="gossip",
+    mesh_fn=_runtime.dif_altgdmin_mesh))
 
 register_solver(SolverDef(
     name="dec_altgdmin", fn=_alg.dec_altgdmin,
-    topology="W", comm="gossip"))
+    topology="W", combine="gossip",
+    mesh_fn=_runtime.dec_altgdmin_mesh))
 
 register_solver(SolverDef(
     name="centralized_altgdmin", fn=_alg.centralized_altgdmin,
-    topology="none", comm="central", decentralized=False))
+    topology="none", combine="central", decentralized=False))
 
 register_solver(SolverDef(
     name="dgd_altgdmin", fn=_alg.dgd_altgdmin,
-    topology="adj", comm="neighbor"))
+    topology="adj", combine="neighbor",
+    mesh_fn=_runtime.dgd_altgdmin_mesh))
+
+register_solver(SolverDef(
+    name="exact_diffusion", fn=_alg.exact_diffusion_altgdmin,
+    topology="W", combine="exact_diffusion"))
+
+register_solver(SolverDef(
+    name="beyond_central", fn=_alg.beyond_central_altgdmin,
+    topology="W", combine="beyond_central",
+    spec_kwargs=("local_steps",)))

@@ -125,18 +125,20 @@ def _resolve_spec_eta(spec: ExperimentSpec, init) -> float:
 
 def comm_time_axis(spec: ExperimentSpec, solver: SolverDef,
                    graph: Graph) -> np.ndarray:
-    """Cumulative emulated wall-clock per outer iteration for the
-    solver's communication pattern under the spec's network model."""
+    """Cumulative emulated wall-clock per outer iteration, priced from
+    the solver's CombineRule comm signature under the spec's network
+    model (one d×r exchange per neighbour per round).  Solvers that
+    consume ``local_steps`` (beyond_central) pay that many compute
+    units per outer iteration — the comm savings are not free local
+    work."""
     p, c = spec.problem, spec.comm
-    model = _COMM_MODELS[c.model]
-    if solver.comm == "central":
-        return _cm.centralized_time_axis(
-            spec.solver.T_GD, p.d, p.r, p.L, c.compute_s_per_iter,
-            model=model, seed=c.seed)
-    t_con = spec.solver.T_con if solver.comm == "gossip" else 1
-    return _cm.decentralized_time_axis(
-        spec.solver.T_GD, t_con, p.d, p.r, graph.max_degree,
-        c.compute_s_per_iter, model=model, seed=c.seed)
+    compute = c.compute_s_per_iter
+    if "local_steps" in solver.spec_kwargs:
+        compute *= spec.solver.local_steps
+    return _cm.time_axis_from_signature(
+        solver.signature(spec.solver.T_con), spec.solver.T_GD, p.d, p.r,
+        p.L, graph.max_degree, compute,
+        model=_COMM_MODELS[c.model], seed=c.seed)
 
 
 def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
@@ -161,13 +163,21 @@ def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
     eta = _resolve_spec_eta(spec, mat.init)
     eng = resolve_engine(engine, spec.engine.backend,
                          blk_d=spec.engine.blk_d)
+    if (spec.solver.local_steps != 1
+            and "local_steps" not in solver.spec_kwargs):
+        raise ValueError(
+            f"solver {solver.name!r} does not consume local_steps "
+            f"(got local_steps={spec.solver.local_steps}); only solvers "
+            f"declaring it in spec_kwargs honor the field")
     if spec.substrate == "mesh":
         result = _run_mesh(spec, solver, mat, eng, eta)
     else:
+        extra = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
         result = solver.call(mat.init.U0, mat.Xg, mat.yg, mat.W, mat.adj,
                              eta=eta, T_GD=spec.solver.T_GD,
                              T_con=spec.solver.T_con,
-                             U_star=mat.problem.U_star, engine=eng)
+                             U_star=mat.problem.U_star, engine=eng,
+                             **extra)
     return Trace(spec=spec, U_nodes=result.U_nodes, B_nodes=result.B_nodes,
                  sd_max=np.asarray(result.sd_max),
                  sd_mean=np.asarray(result.sd_mean),

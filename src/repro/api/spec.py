@@ -152,12 +152,20 @@ class SolverSpec:
 
     ``eta=None`` resolves via Theorem 1's η = c_η/(n σ*max²), estimating
     σ*max from the spectral init's R diagonal (the paper's recipe).
+    ``local_steps`` is consumed only by solvers that declare it
+    (``beyond_central``: local adapt steps per single gossip round).
     """
     name: str = "dif_altgdmin"
     T_GD: int = 250
     T_con: int = 10
     eta: Optional[float] = None
     c_eta: float = 0.4
+    local_steps: int = 1
+
+    def __post_init__(self):
+        if self.local_steps < 1:
+            raise ValueError(f"local_steps must be >= 1, got "
+                             f"{self.local_steps}")
 
 
 @dataclasses.dataclass(frozen=True)

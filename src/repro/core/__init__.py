@@ -10,9 +10,12 @@ from repro.core.agree import agree
 from repro.core.spectral import decentralized_spectral_init, SpectralInit
 from repro.core.altgdmin import (
     dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
+    exact_diffusion_altgdmin, beyond_central_altgdmin,
     minimize_B, grad_U, RunResult, resolve_eta,
 )
 from repro.core.engine import AltgdminEngine, resolve_engine
 from repro.core import theory
 from repro.core import comm_model
-from repro.core.runtime import dif_altgdmin_mesh
+from repro.core.runtime import (
+    dif_altgdmin_mesh, dec_altgdmin_mesh, dgd_altgdmin_mesh,
+)

@@ -8,31 +8,28 @@ with the equal-neighbor W of repro.distributed.mixing).
 
 Proposition 1: after T_con rounds on a connected graph,
 max_g |z_g − z̄| ≤ γ(W)^{T_con} · max_g |z_g^{(in)} − z̄|.
+
+Both entry points are thin views of the unified consensus layer
+(:mod:`repro.distributed.consensus`): :func:`agree` is the gossip rule's
+exact sequential simulator lowering, :func:`agree_power` its precomputed
+single-product form (the fused backends' hoist target).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.consensus import stacked_dense_mix, stacked_product
+
 
 def agree(Z: jax.Array, W: jax.Array, T_con: int) -> jax.Array:
     """Run T_con gossip rounds. Z: (L, ...), W: (L, L). Static unroll is
     avoided via lax.scan so T_GD-deep outer loops stay compile-cheap."""
-    if T_con == 0:
-        return Z
-    W = W.astype(Z.dtype)
-    flat = Z.reshape(Z.shape[0], -1)
-
-    def body(carry, _):
-        return W @ carry, None
-
-    out, _ = jax.lax.scan(body, flat, None, length=T_con)
-    return out.reshape(Z.shape)
+    return stacked_product(Z, W, T_con)
 
 
 def agree_power(Z: jax.Array, W: jax.Array, T_con: int) -> jax.Array:
     """Equivalent single-product form using W^{T_con}; useful when the same
     (W, T_con) is reused many times (the matrix power is precomputable)."""
-    Wp = jnp.linalg.matrix_power(W, T_con).astype(Z.dtype)
-    flat = Z.reshape(Z.shape[0], -1)
-    return (Wp @ flat).reshape(Z.shape)
+    Wp = jnp.linalg.matrix_power(W, T_con)
+    return stacked_dense_mix(Z, Wp, backend="xla-ref")

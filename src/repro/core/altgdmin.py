@@ -7,7 +7,19 @@ compared in the paper's Experiment 1:
   * ``centralized_altgdmin``— AltGDmin [10] with a fusion center (exact
                               gradient aggregation);
   * ``dgd_altgdmin``        — the DGD-variation defined in Experiment 1:
-                              Ũ_g ← QR((1/deg_g) Σ_{g'∈N_g} U_g' − η ∇f_g).
+                              Ũ_g ← QR((1/deg_g) Σ_{g'∈N_g} U_g' − η ∇f_g);
+
+plus the related-work combine-rule variants enabled by the unified
+consensus layer (:mod:`repro.distributed.consensus`):
+
+  * ``exact_diffusion_altgdmin`` — the projection-corrected combine of
+    Exact Subspace Diffusion (arXiv:2304.07358): the adapt iterate is
+    bias-corrected with the previous adapt state before the AGREE
+    product, so the combine tracks the exact fixed point;
+  * ``beyond_central_altgdmin``  — the communication-efficient variant of
+    Beyond Centralization (arXiv:2512.22675): several local adapt steps
+    per outer iteration, then ONE gossip round (a single d×r exchange
+    per iteration instead of the T_con-round chain).
 
 Simulator layout: node axis leading. U_nodes: (L, d, r); per-node data
 Xg: (L, tpn, n, d), yg: (L, tpn, n).  All loops are lax.scan so tracing
@@ -37,6 +49,7 @@ from repro.core.engine import (AltgdminEngine, ref_grad_U, ref_minimize_B,
                                resolve_engine)
 from repro.core.metrics import subspace_distance, consensus_spread
 from repro.core.spectral import _qr_pos
+from repro.distributed.consensus import ExactDiffusionCombine
 
 
 class RunResult(NamedTuple):
@@ -174,6 +187,74 @@ def centralized_altgdmin(U0, Xg, yg, *, eta: float, T_GD: int,
                                             (Xb.shape[0],) + U_fin.shape),
                            Xb, yb)
     return RunResult(U_fin[None], B_fin, sd_max, sd_mean, spread, eta)
+
+
+def exact_diffusion_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                             T_con: int, U_star=None,
+                             engine: Optional[AltgdminEngine] = None,
+                             backend: Optional[str] = None) -> RunResult:
+    """Exact Subspace Diffusion (arXiv:2304.07358): adapt-correct-combine.
+
+    Per iteration: ψ_g = U_g − ηL ∇f_g (adapt), then the bias correction
+    φ_g = ψ_g + U_g^{prev-combined} − ψ_g^{prev} (the exact-diffusion
+    recursion — at τ=0 the correction vanishes), then T_con AGREE rounds
+    on φ and the QR retraction back onto the Grassmannian (the subspace
+    "projection" step).  Removes the diffusion bias floor when the nodes'
+    local minimizers disagree (heterogeneous tasks)."""
+    L = U0_nodes.shape[0]
+    U_star_ = U_star if U_star is not None else U0_nodes[0]
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4
+    mix = eng.make_mixer(W, T_con, rule="exact_diffusion")
+
+    def step(carry, tau):
+        U, psi_prev = carry
+        Xb, yb = _select(Xg, yg, 2 * tau)
+        Xc, yc = _select(Xg, yg, 2 * tau + 1)
+        B, G = eng.min_grad(U, Xb, yb, Xc, yc, same_data=same_data)
+        psi = U - (eta * L) * G                        # adapt
+        phi = ExactDiffusionCombine.correct(psi, psi_prev, U)
+        U_tilde = mix(phi)                             # combine
+        U_new, _ = _qr_pos(U_tilde)                    # projection
+        return (U_new, psi), _metrics(U_new, U_star_)
+
+    (U_fin, _), (sd_max, sd_mean, spread) = jax.lax.scan(
+        step, (U0_nodes, U0_nodes), jnp.arange(T_GD))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
+    return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
+
+
+def beyond_central_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                            T_con: int = 1, local_steps: int = 1,
+                            U_star=None,
+                            engine: Optional[AltgdminEngine] = None,
+                            backend: Optional[str] = None) -> RunResult:
+    """Beyond Centralization (arXiv:2512.22675): communication-efficient
+    AltGDmin — ``local_steps`` full local adapt steps (min-B + projected
+    GD + retraction, no communication) per outer iteration, then ONE
+    gossip round.  The wire cost per outer iteration is a single d×r
+    neighbour exchange, independent of ``T_con`` (which the combine rule
+    ignores by construction)."""
+    L = U0_nodes.shape[0]
+    U_star_ = U_star if U_star is not None else U0_nodes[0]
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4
+    mix1 = eng.make_mixer(W, T_con, rule="beyond_central")
+
+    def step(U, tau):
+        for j in range(local_steps):                   # local adapt epoch
+            fold = tau * local_steps + j
+            Xb, yb = _select(Xg, yg, 2 * fold)
+            Xc, yc = _select(Xg, yg, 2 * fold + 1)
+            B, G = eng.min_grad(U, Xb, yb, Xc, yc, same_data=same_data)
+            U, _ = _qr_pos(U - (eta * L) * G)
+        U_new, _ = _qr_pos(mix1(U))                    # one combine round
+        return U_new, _metrics(U_new, U_star_)
+
+    U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
+        step, U0_nodes, jnp.arange(T_GD))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
+    return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
 
 
 def dgd_altgdmin(U0_nodes, Xg, yg, adj, *, eta: float, T_GD: int,

@@ -60,6 +60,25 @@ def decentralized_time_axis(n_iters: int, T_con: int, d: int, r: int,
     return np.cumsum(per_iter)
 
 
+def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
+                             max_deg: int, compute_s_per_iter: float,
+                             model: NetworkModel = ETHERNET_1GBPS,
+                             seed: int = 0) -> np.ndarray:
+    """Price a solver's wall-clock axis from its CombineRule
+    :class:`~repro.distributed.consensus.CommSignature`: ``"central"``
+    is a gather + broadcast per iteration, ``"none"`` is compute only,
+    and the decentralized patterns cost ``rounds_per_iter`` gossip
+    rounds of a d×r exchange with every neighbour."""
+    if sig.pattern == "central":
+        return centralized_time_axis(n_iters, d, r, L, compute_s_per_iter,
+                                     model=model, seed=seed)
+    if sig.pattern == "none" or sig.rounds_per_iter == 0:
+        return np.cumsum(np.full(n_iters, compute_s_per_iter))
+    return decentralized_time_axis(n_iters, sig.rounds_per_iter, d, r,
+                                   max_deg, compute_s_per_iter,
+                                   model=model, seed=seed)
+
+
 def centralized_time_axis(n_iters: int, d: int, r: int, L: int,
                           compute_time_per_iter: float,
                           model: NetworkModel = ETHERNET_1GBPS,

@@ -30,7 +30,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.agree import agree
+from repro.distributed.consensus import get_rule
 from repro.kernels import ops
 
 
@@ -132,43 +132,20 @@ class AltgdminEngine:
 
     # ----------------------------------------------------------- combine
 
-    def make_mixer(self, W, T_con: int):
-        """The AGREE phase as a callable Z ↦ consensus(Z).
+    def make_mixer(self, W, T_con: int, *, rule: str = "gossip"):
+        """The AGREE phase as a callable Z ↦ consensus(Z), lowered by the
+        named :class:`~repro.distributed.consensus.CombineRule`.
 
-        xla-ref keeps the seed's sequential T_con-round ``agree`` (exact
-        numerics); fused backends hoist onto the precomputed W^{T_con}
-        (``agree_power``) and run it as one fused weighted combine."""
-        if T_con == 0:
-            return lambda Z: Z
-        if not self.fused:
-            return lambda Z: agree(Z, W, T_con)
-        Wp = jnp.linalg.matrix_power(W.astype(jnp.float32), T_con)
-
-        def mix(Z):
-            if Z.dtype == jnp.float64:
-                # The fused combine kernel accumulates in f32; x64 runs
-                # keep the exact sequential AGREE so double precision is
-                # not silently truncated in the consensus phase.
-                return agree(Z, W, T_con)
-            return ops.mix_nodes(Z, Wp, backend=self.backend
-                                 ).astype(Z.dtype)
-        return mix
+        xla-ref keeps the exact sequential T_con-round product (seed
+        numerics, any dtype); fused backends hoist onto the precomputed
+        W^{T_con} single combine, with the f64 fallback to the exact
+        path (the fused kernel accumulates in f32)."""
+        return get_rule(rule).make_sim_mixer(W, T_con, backend=self.backend)
 
     def make_neighbor_mixer(self, M):
         """DGD's row-stochastic neighbour average Z ↦ M Z (single round,
         no self weight — M comes in precomputed)."""
-        def ref_mix(Z):
-            return jnp.einsum("gh,h...->g...", M.astype(Z.dtype), Z)
-
-        if not self.fused:
-            return ref_mix
-
-        def mix(Z):
-            if Z.dtype == jnp.float64:   # same x64 policy as make_mixer
-                return ref_mix(Z)
-            return ops.mix_nodes(Z, M.astype(jnp.float32),
-                                 backend=self.backend).astype(Z.dtype)
-        return mix
+        return get_rule("neighbor").make_sim_mixer(M, backend=self.backend)
 
 
 def resolve_engine(engine=None, backend: str | None = None,

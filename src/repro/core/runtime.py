@@ -1,22 +1,32 @@
-"""Dif-AltGDmin on the production mesh — the paper's Algorithm 3 with
+"""AltGDmin on the production mesh — the paper's algorithms with
 nodes = mesh devices and AGREE = collective-permute ring gossip.
 
 This is the hardware counterpart of the simulator in core/altgdmin.py:
 each device holds ONE node's task shard (X_g, y_g) and subspace iterate
 U_g; per outer iteration it solves its local LS, takes the projected-GD
-pre-image, exchanges the iterate with its ring neighbours T_con times
-(``lax.ppermute`` — nearest-neighbour on the ICI torus), and retracts
-with a local QR.  Numerically identical to the simulator run with the
+pre-image, exchanges iterates (or gradients) with its ring neighbours via
+``lax.ppermute`` — nearest-neighbour on the ICI torus — and retracts with
+a local QR.  Numerically identical to the simulator run with the
 circulant ring W (tests/test_runtime_mesh.py), so every Theorem-1
 guarantee transfers with γ(W) = γ(ring).
 
+All three decentralized solvers share one shard_map skeleton
+(:func:`_altgdmin_mesh`) and differ only in the per-iteration update:
+
+  * :func:`dif_altgdmin_mesh` — adapt-then-combine (Algorithm 3);
+  * :func:`dec_altgdmin_mesh` — combine-then-adjust (gossip the
+    gradients [9]);
+  * :func:`dgd_altgdmin_mesh` — DGD's self-excluding neighbour average
+    (Experiment 1 iii).
+
 The min-B and gradient phases route through the same
 :class:`repro.core.engine.AltgdminEngine` as the simulator (``engine=``/
-``backend=`` kwargs): ``xla-ref`` reproduces the seed einsum numerics,
-``pallas``/``pallas-interpret`` run the fused node-batched kernel on each
-device — the hardware nodes get the fused production path.  Only the
-gossip stays runtime-specific (collective-permutes instead of the
-simulator's dense ``W`` products).
+``backend=`` kwargs), and the combine phase through the unified
+:class:`~repro.distributed.consensus.CombineRule` mesh lowering: per
+gossip round the K neighbour blocks arrive by collective-permute and are
+merged in ONE fused ``gossip_axpy.gossip_combine`` dispatch on the
+pallas backends (the unfused weighted-sum chain remains the xla-ref /
+float64 exact path).
 
 The federated property is structural: only Ŭ_g (d×r) crosses the wire;
 X_g, y_g, B_g never leave the device.
@@ -36,28 +46,31 @@ from jax.sharding import PartitionSpec as P
 from repro.core.engine import AltgdminEngine, resolve_engine
 from repro.core.metrics import consensus_spread, subspace_distance
 from repro.core.spectral import _qr_pos
-from repro.distributed.gossip import ring_weights
+from repro.distributed.consensus import get_rule
 from repro.utils.compat import shard_map as _shard_map
 
 
-def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                      T_GD: int, T_con: int,
-                      shifts=(-1, 1), self_weight=None,
-                      engine: AltgdminEngine | None = None,
-                      backend: str | None = None, U_star=None):
-    """U0: (L, d, r); Xg: (L, tpn, n, d); yg: (L, tpn, n) — leading axis
-    sharded over ``axis_name`` (L = mesh axis size: one node per device).
-    Returns (U_nodes, B_nodes) with the same layouts, or a
-    :class:`~repro.core.altgdmin.RunResult` when ``U_star`` is given."""
+def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                   T_GD: int, make_update,
+                   engine: AltgdminEngine | None,
+                   backend: str | None, U_star):
+    """Shared shard_map skeleton for the decentralized mesh solvers.
+
+    ``make_update(eng) -> update(U, G)`` builds the per-iteration update
+    (this device's iterate + local gradient → new iterate) from the
+    resolved engine, so the closure can pick the engine's backend for
+    its fused combine; everything else — the local fused min-B +
+    gradient dispatch, the scan, the optional metrics all-gather, the
+    final min-B — is solver-independent.
+    """
     from repro.core.altgdmin import RunResult
 
     L = mesh.shape[axis_name]
     if U0.shape[0] != L:
         raise ValueError(f"need one node per device: L={U0.shape[0]} vs "
                          f"mesh axis {L}")
-    sw, wn = ring_weights(shifts, self_weight)
-    eta_L = eta * L
     eng = resolve_engine(engine, backend)
+    update = make_update(eng)
     with_metrics = U_star is not None
 
     def local_min_B(U, X, y):
@@ -72,25 +85,13 @@ def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                             same_data=True)
         return B[0], G[0]
 
-    def gossip(z):
-        def round_(carry, _):
-            acc = sw * carry
-            for s in shifts:
-                perm = [(i, (i - s) % L) for i in range(L)]
-                acc = acc + wn * jax.lax.ppermute(carry, axis_name, perm)
-            return acc, None
-        out, _ = jax.lax.scan(round_, z, None, length=T_con)
-        return out
-
     def body(U0, Xg, yg, U_star):
         U = U0[0]                       # this device's node
         X, y = Xg[0], yg[0]
 
         def step(U, _):
             _, G = local_min_grad(U, X, y)
-            U_breve = U - eta_L * G                  # local adapt
-            U_tilde = gossip(U_breve)                # combine (diffusion)
-            U_new, _ = _qr_pos(U_tilde)              # projection
+            U_new = update(U, G)
             if not with_metrics:
                 return U_new, None
             U_all = jax.lax.all_gather(U_new, axis_name)     # (L, d, r)
@@ -121,3 +122,85 @@ def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                      sd_max=jnp.max(sd, axis=0),
                      sd_mean=jnp.mean(sd, axis=0),
                      spread=spread[0], eta=eta)
+
+
+def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                      T_GD: int, T_con: int,
+                      shifts=(-1, 1), self_weight=None,
+                      engine: AltgdminEngine | None = None,
+                      backend: str | None = None, U_star=None):
+    """Algorithm 3 on the mesh: adapt (local projected-GD pre-image),
+    THEN combine (T_con gossip rounds on the updated iterate), then the
+    QR retraction.  U0: (L, d, r); Xg: (L, tpn, n, d); yg: (L, tpn, n) —
+    leading axis sharded over ``axis_name`` (one node per device).
+    Returns (U_nodes, B_nodes) with the same layouts, or a
+    :class:`~repro.core.altgdmin.RunResult` when ``U_star`` is given."""
+    L = mesh.shape[axis_name]
+    eta_L = eta * L
+
+    def make_update(eng):
+        gossip = get_rule("gossip").make_mesh_mixer(
+            axis_name, L, T_con, shifts, self_weight, backend=eng.backend)
+
+        def update(U, G):
+            U_breve = U - eta_L * G                  # local adapt
+            U_tilde = gossip(U_breve)                # combine (diffusion)
+            return _qr_pos(U_tilde)[0]               # projection
+        return update
+
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star)
+
+
+def dec_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                      T_GD: int, T_con: int,
+                      shifts=(-1, 1), self_weight=None,
+                      engine: AltgdminEngine | None = None,
+                      backend: str | None = None, U_star=None):
+    """Dec-AltGDmin [9] on the mesh: combine-then-adjust — T_con gossip
+    rounds on the *gradients*, then the projected-GD step with the
+    gossiped estimate.  Same layouts/returns as
+    :func:`dif_altgdmin_mesh`."""
+    L = mesh.shape[axis_name]
+    eta_L = eta * L
+
+    def make_update(eng):
+        gossip = get_rule("gossip").make_mesh_mixer(
+            axis_name, L, T_con, shifts, self_weight, backend=eng.backend)
+
+        def update(U, G):
+            G_hat = gossip(G)                        # consensus on grads
+            return _qr_pos(U - eta_L * G_hat)[0]
+        return update
+
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star)
+
+
+def dgd_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                      T_GD: int, T_con: int = 1,
+                      shifts=(-1, 1), self_weight=None,
+                      engine: AltgdminEngine | None = None,
+                      backend: str | None = None, U_star=None):
+    """DGD-variation on the mesh (Experiment 1 iii):
+    Ũ_g ← QR((1/K) Σ_s U_{g+s} − η ∇f_g) — ONE self-excluding neighbour
+    exchange per iteration (the circulant graph of ``shifts`` is
+    K-regular, so the simulator's (1/deg) adjacency average is exactly
+    the equal-weight shift average).  ``T_con``/``self_weight`` are
+    accepted for signature uniformity and ignored: the rule is a single
+    round with structurally zero self weight."""
+    L = mesh.shape[axis_name]
+
+    def make_update(eng):
+        nbr_mix = get_rule("neighbor").make_mesh_mixer(
+            axis_name, L, 1, shifts, backend=eng.backend)
+
+        def update(U, G):
+            return _qr_pos(nbr_mix(U) - eta * G)[0]
+        return update
+
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star)

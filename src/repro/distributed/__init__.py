@@ -6,6 +6,10 @@ from repro.distributed.mixing import (
     metropolis_weights, equal_neighbor_weights, lazy_weights, gamma,
     circulant_weights,
 )
+from repro.distributed.consensus import (
+    CombineRule, CommSignature, COMBINE_RULES, register_rule, get_rule,
+    rule_names, combine_blocks,
+)
 from repro.distributed.gossip import (
     roll_gossip, shard_map_gossip, ring_weights, torus_shifts, axis_mean,
 )

@@ -28,9 +28,16 @@ import re
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import consensus as _consensus
 from repro.distributed.gossip import roll_gossip
 
 STRATEGIES = ("allreduce", "diffusion", "consensus", "dgd", "local")
+
+# every strategy is one CombineRule applied to grads or params; the rule's
+# CommSignature prices the wire cost (comm_bytes_per_step below)
+RULE_FOR_STRATEGY = {"allreduce": "central", "diffusion": "gossip",
+                     "consensus": "gossip", "dgd": "neighbor",
+                     "local": "none"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,11 +85,7 @@ def _mix(tree, mask, mix_fn, wire_dtype=None):
 
 def _node_mean(tree):
     """Exact mean over the node axis, broadcast back (→ all-reduce)."""
-    def mean(x):
-        acc_dt = jnp.promote_types(x.dtype, jnp.float32)
-        m = jnp.mean(x.astype(acc_dt), axis=0, keepdims=True)
-        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
-    return jax.tree.map(mean, tree)
+    return jax.tree.map(_consensus.node_mean, tree)
 
 
 def aggregate_gradients(grads, agg: AggregationConfig):
@@ -126,14 +129,10 @@ def post_update(params, agg: AggregationConfig):
 def comm_bytes_per_step(n_params_communicated: int, itemsize: int,
                         agg: AggregationConfig, n_nodes: int) -> int:
     """Analytic per-step communication volume (for the benchmark tables):
-    bytes sent per node per step."""
-    if agg.strategy == "allreduce":
-        # ring all-reduce: 2·(L−1)/L · size
-        return int(2 * (n_nodes - 1) / n_nodes
-                   * n_params_communicated * itemsize)
-    if agg.strategy in ("diffusion", "consensus"):
-        return int(agg.t_con * len(agg.shifts)
-                   * n_params_communicated * itemsize)
-    if agg.strategy == "dgd":
-        return int(len(agg.shifts) * n_params_communicated * itemsize)
-    return 0
+    bytes sent per node per step, from the strategy's CombineRule
+    signature (gossip: t_con rounds × deg messages; neighbor: one
+    exchange; central: the ring all-reduce volume)."""
+    sig = _consensus.get_rule(RULE_FOR_STRATEGY[agg.strategy]
+                              ).signature(agg.t_con)
+    return sig.bytes_per_iter(n_params_communicated, itemsize, n_nodes,
+                              degree=len(agg.shifts))

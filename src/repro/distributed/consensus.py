@@ -1,0 +1,365 @@
+"""Unified pluggable consensus layer — every ``Z ← W Z`` in one place.
+
+The AGREE protocol is the communication heart of the AltGDmin family,
+but before this module each execution surface re-derived the mixing
+product independently: the simulator's stacked scan (core/agree.py), the
+mesh runtime's inline ppermute chain (core/runtime.py), the trainer's
+roll form (distributed/gossip.py / aggregation.py), and the engine's
+fused ``W^{T_con}`` combine (core/engine.py).  A :class:`CombineRule`
+now owns all of them, with three lowered forms per rule:
+
+  * **simulator** — stacked node axis, ``Z: (L, ...)``.  The unfused
+    lowering is the exact sequential product (dtype-preserving, the
+    numerics anchor); fused backends hoist onto a precomputed dense
+    mixer executed by ``kernels/gossip_axpy.mix_rows`` (one weighted
+    combine instead of T_con HBM sweeps).
+  * **mesh** — one node per device inside ``shard_map``.  Each gossip
+    round exchanges blocks by ``lax.ppermute`` and then combines them:
+    the unfused lowering is the sequential weighted-sum chain, the fused
+    lowering is ONE K+1-way ``kernels/gossip_axpy.gossip_combine``
+    dispatch per round.
+  * **comm signature** — a :class:`CommSignature` consumed by
+    :mod:`repro.core.comm_model` and the API's wall-clock pricing, so a
+    rule's communication cost is declared next to its math.
+
+Precision policy (shared by every lowering): the fused combine kernels
+accumulate in f32, so float64 operands always take the exact unfused
+path — x64 simulations are never silently truncated in the consensus
+phase.  Lower-precision operands (bf16 wire dtypes) accumulate in the
+promoted f32 dtype on the unfused path too, matching the kernels.
+
+Rules registered here: ``gossip`` (the paper's T_con-round AGREE),
+``neighbor`` (DGD's single self-excluding exchange), ``central`` (fusion
+center), ``none`` (no communication), plus the related-work combines —
+``exact_diffusion`` (the projection-corrected combine of *Exact Subspace
+Diffusion for Decentralized Multitask Learning*, arXiv:2304.07358) and
+``beyond_central`` (the communication-efficient single-round combine of
+*Beyond Centralization*, arXiv:2512.22675).  ``register_rule`` is open.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSignature:
+    """What a combine rule costs on the wire, per outer iteration.
+
+    ``pattern`` prices the exchange shape: ``"gossip"`` /``"neighbor"``
+    send the iterate to every graph neighbour ``rounds_per_iter`` times;
+    ``"central"`` is one gather + one broadcast; ``"none"`` is silent.
+    """
+    pattern: str                 # "gossip" | "neighbor" | "central" | "none"
+    rounds_per_iter: int
+
+    def bytes_per_iter(self, n_entries: int, itemsize: int, n_nodes: int,
+                       degree: int) -> int:
+        """Bytes sent per node per outer iteration (benchmark tables)."""
+        if self.pattern == "central":
+            # ring all-reduce equivalent: 2·(L−1)/L · size
+            return int(2 * (n_nodes - 1) / n_nodes * n_entries * itemsize)
+        return int(self.rounds_per_iter * degree * n_entries * itemsize)
+
+
+# ----------------------------------------------------------------------
+# the combine primitives every lowering bottoms out in
+# ----------------------------------------------------------------------
+
+def _acc_dtype(dtype):
+    return jnp.promote_types(dtype, jnp.float32)
+
+
+def _fused_wanted(backend: str, dtype) -> bool:
+    """Fused Pallas combines accumulate in f32: take them only on the
+    pallas backends and never for float64 operands (x64 policy)."""
+    return backend != "xla-ref" and jnp.dtype(dtype) != jnp.float64
+
+
+def combine_blocks(z, neighbors: Sequence[jax.Array], w_self: float,
+                   w_nbr: float, *, backend: str = "xla-ref"):
+    """ONE K+1-way weighted combine ``z ← w_self·z + w_nbr·Σ_k nbr_k`` —
+    the primitive under every circulant lowering (mesh ppermute rounds,
+    trainer roll rounds).  Unfused: the sequential chain in the promoted
+    accumulator dtype; fused: a single ``gossip_combine`` dispatch."""
+    from repro.kernels import ops
+    if _fused_wanted(backend, z.dtype):
+        return ops.gossip_combine(z, jnp.stack(list(neighbors)),
+                                  w_self, w_nbr, backend=backend)
+    acc_dt = _acc_dtype(z.dtype)
+    acc = w_self * z.astype(acc_dt)
+    for nbr in neighbors:
+        acc = acc + w_nbr * nbr.astype(acc_dt)
+    return acc.astype(z.dtype)
+
+
+def stacked_product(Z: jax.Array, W: jax.Array, T_con: int) -> jax.Array:
+    """The exact sequential simulator product: T_con rounds of ``W @ Z``
+    over the leading node axis, dtype-preserving (the seed's ``agree``
+    math — every other lowering is validated against this)."""
+    if T_con == 0:
+        return Z
+    W = W.astype(Z.dtype)
+    flat = Z.reshape(Z.shape[0], -1)
+
+    def body(carry, _):
+        return W @ carry, None
+
+    out, _ = jax.lax.scan(body, flat, None, length=T_con)
+    return out.reshape(Z.shape)
+
+
+def stacked_dense_mix(Z: jax.Array, M: jax.Array, *, backend: str):
+    """Single dense combine ``Z ← M Z`` for a precomputed mixer (e.g.
+    ``W^{T_con}``): fused ``mix_rows`` on the pallas backends, einsum on
+    xla-ref/f64."""
+    from repro.kernels import ops
+    if _fused_wanted(backend, Z.dtype):
+        return ops.mix_nodes(Z, M.astype(jnp.float32),
+                             backend=backend).astype(Z.dtype)
+    return jnp.einsum("gh,h...->g...", M.astype(Z.dtype), Z)
+
+
+def node_mean(Z: jax.Array) -> jax.Array:
+    """Fusion-center combine: exact mean over the node axis, broadcast
+    back (lowers to one all-reduce under pjit)."""
+    acc_dt = _acc_dtype(Z.dtype)
+    m = jnp.mean(Z.astype(acc_dt), axis=0, keepdims=True)
+    return jnp.broadcast_to(m, Z.shape).astype(Z.dtype)
+
+
+# ----------------------------------------------------------------------
+# CombineRule
+# ----------------------------------------------------------------------
+
+class CombineRule:
+    """One consensus/combine scheme, lowered three ways.
+
+    ``make_sim_mixer(W, T_con, backend=...)`` returns the simulator
+    closure ``Z (L, ...) ↦ combined Z``; ``make_mesh_mixer(...)`` the
+    per-device closure used inside ``shard_map`` (circulant topologies —
+    each shift is one collective-permute); ``signature(T_con)`` the comm
+    cost.  Subclasses override the pieces that differ.
+    """
+
+    name: str = "base"
+
+    # ------------------------------------------------------- simulator
+
+    def make_sim_mixer(self, W, T_con: int, *,
+                       backend: str = "xla-ref") -> Callable:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ mesh
+
+    def make_mesh_mixer(self, axis_name: str, L: int, T_con: int,
+                        shifts: Sequence[int] = (-1, 1),
+                        self_weight: float | None = None, *,
+                        backend: str = "xla-ref") -> Callable:
+        raise NotImplementedError
+
+    # ------------------------------------------------------- signature
+
+    def signature(self, T_con: int) -> CommSignature:
+        raise NotImplementedError
+
+    # ---------------------------------------------------------- shared
+
+    @staticmethod
+    def _ring_weights(shifts: Sequence[int], self_weight: float | None):
+        k = len(shifts)
+        sw = self_weight if self_weight is not None else 1.0 / (k + 1)
+        return sw, (1.0 - sw) / k
+
+    @classmethod
+    def _mesh_round(cls, z, axis_name: str, L: int,
+                    shifts: Sequence[int], sw: float, wn: float,
+                    backend: str):
+        """One gossip round on hardware: K collective-permutes to fetch
+        neighbour blocks, then ONE combine (fused on pallas backends)."""
+        nbrs = []
+        for s in shifts:
+            perm = [(i, (i - s) % L) for i in range(L)]   # receive from i+s
+            nbrs.append(jax.lax.ppermute(z, axis_name, perm))
+        return combine_blocks(z, nbrs, sw, wn, backend=backend)
+
+    @classmethod
+    def roll_round(cls, x, shifts: Sequence[int], sw: float, wn: float, *,
+                   backend: str = "xla-ref"):
+        """One gossip round in the pjit/trainer form: neighbour blocks
+        come from ``jnp.roll`` over the leading node axis (XLA lowers the
+        sharded roll to the same collective-permute)."""
+        nbrs = [jnp.roll(x, -s, axis=0) for s in shifts]
+        return combine_blocks(x, nbrs, sw, wn, backend=backend)
+
+
+class GossipCombine(CombineRule):
+    """The paper's AGREE combine: T_con rounds of the mixing product
+    ``Z ← W Z`` (Algorithm 1)."""
+
+    name = "gossip"
+
+    def make_sim_mixer(self, W, T_con: int, *, backend: str = "xla-ref"):
+        if T_con == 0:
+            return lambda Z: Z
+        if backend == "xla-ref":
+            return lambda Z: stacked_product(Z, W, T_con)
+        Wp = jnp.linalg.matrix_power(W.astype(jnp.float32), T_con)
+
+        def mix(Z):
+            if Z.dtype == jnp.float64:
+                # f32-accumulating fused kernel: keep x64 runs exact
+                return stacked_product(Z, W, T_con)
+            return stacked_dense_mix(Z, Wp, backend=backend)
+        return mix
+
+    def make_mesh_mixer(self, axis_name, L, T_con, shifts=(-1, 1),
+                        self_weight=None, *, backend="xla-ref"):
+        sw, wn = self._ring_weights(shifts, self_weight)
+        if T_con == 0:
+            return lambda z: z
+
+        def gossip(z):
+            def round_(carry, _):
+                return self._mesh_round(carry, axis_name, L, shifts, sw,
+                                        wn, backend), None
+            out, _ = jax.lax.scan(round_, z, None, length=T_con)
+            return out
+        return gossip
+
+    def signature(self, T_con: int) -> CommSignature:
+        return CommSignature("gossip", T_con)
+
+
+class NeighborCombine(CombineRule):
+    """DGD's combine: ONE row-stochastic neighbour average that excludes
+    the node itself (Experiment 1's ``(1/deg_g) Σ_{g'∈N_g} U_g'``).  The
+    simulator form takes the precomputed neighbour-average matrix M."""
+
+    name = "neighbor"
+
+    def make_sim_mixer(self, M, T_con: int = 1, *, backend: str = "xla-ref"):
+        return lambda Z: stacked_dense_mix(Z, M, backend=backend)
+
+    def make_mesh_mixer(self, axis_name, L, T_con=1, shifts=(-1, 1),
+                        self_weight=None, *, backend="xla-ref"):
+        # self weight is structurally zero: the average excludes the node
+        wn = 1.0 / len(shifts)
+        return lambda z: self._mesh_round(z, axis_name, L, shifts, 0.0,
+                                          wn, backend)
+
+    def signature(self, T_con: int) -> CommSignature:
+        return CommSignature("neighbor", 1)
+
+
+class CentralCombine(CombineRule):
+    """Fusion-center combine: the exact node mean (AltGDmin [10])."""
+
+    name = "central"
+
+    def make_sim_mixer(self, W=None, T_con: int = 0, *,
+                       backend: str = "xla-ref"):
+        return node_mean
+
+    def make_mesh_mixer(self, axis_name, L, T_con=0, shifts=(),
+                        self_weight=None, *, backend="xla-ref"):
+        return lambda z: jax.lax.pmean(z, axis_name)
+
+    def signature(self, T_con: int) -> CommSignature:
+        return CommSignature("central", 1)
+
+
+class NoCombine(CombineRule):
+    """Local training: no communication (identity combine)."""
+
+    name = "none"
+
+    def make_sim_mixer(self, W=None, T_con: int = 0, *,
+                       backend: str = "xla-ref"):
+        return lambda Z: Z
+
+    def make_mesh_mixer(self, axis_name, L, T_con=0, shifts=(),
+                        self_weight=None, *, backend="xla-ref"):
+        return lambda z: z
+
+    def signature(self, T_con: int) -> CommSignature:
+        return CommSignature("none", 0)
+
+
+class ExactDiffusionCombine(GossipCombine):
+    """The projection-corrected combine of Exact Subspace Diffusion
+    (arXiv:2304.07358).  The mixing product is standard AGREE, but each
+    application first bias-corrects the adapt iterate with the previous
+    correction state:
+
+        φ_g^τ = ψ_g^τ + U_g^{τ-1} − ψ_g^{τ-1}        (correction)
+        Ũ_g^τ = Σ_j W_gj φ_j^τ  (T_con rounds)        (combine)
+
+    so the combine tracks the exact (bias-free) fixed point instead of
+    the diffusion limit point; the driver carries ``(ψ_prev, U_prev)``
+    through its scan and retracts Ũ onto the Grassmannian afterwards
+    (the subspace projection step).
+    """
+
+    name = "exact_diffusion"
+
+    @staticmethod
+    def correct(psi, psi_prev, U_prev):
+        """φ = ψ + U_prev − ψ_prev (vanishes at τ=0 when ψ_prev=U_prev)."""
+        return psi + U_prev - psi_prev
+
+
+class BeyondCentralCombine(GossipCombine):
+    """The communication-efficient combine of Beyond Centralization
+    (arXiv:2512.22675): nodes take several *local* adapt steps between
+    consensus exchanges and then combine with ONE gossip round — per
+    outer iteration the wire carries a single d×r exchange instead of
+    the T_con-round AGREE chain."""
+
+    name = "beyond_central"
+
+    def make_sim_mixer(self, W, T_con: int = 1, *, backend: str = "xla-ref"):
+        # a single mixing round regardless of T_con — that IS the rule
+        return super().make_sim_mixer(W, 1, backend=backend)
+
+    def make_mesh_mixer(self, axis_name, L, T_con=1, shifts=(-1, 1),
+                        self_weight=None, *, backend="xla-ref"):
+        return super().make_mesh_mixer(axis_name, L, 1, shifts,
+                                       self_weight, backend=backend)
+
+    def signature(self, T_con: int) -> CommSignature:
+        return CommSignature("gossip", 1)
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+COMBINE_RULES: dict[str, CombineRule] = {}
+
+
+def register_rule(rule: CombineRule) -> CombineRule:
+    if rule.name in COMBINE_RULES:
+        raise ValueError(f"combine rule {rule.name!r} already registered")
+    COMBINE_RULES[rule.name] = rule
+    return rule
+
+
+def get_rule(name: str) -> CombineRule:
+    try:
+        return COMBINE_RULES[name]
+    except KeyError:
+        raise ValueError(f"unknown combine rule {name!r}; registered: "
+                         f"{sorted(COMBINE_RULES)}") from None
+
+
+def rule_names() -> tuple[str, ...]:
+    return tuple(sorted(COMBINE_RULES))
+
+
+for _rule in (GossipCombine(), NeighborCombine(), CentralCombine(),
+              NoCombine(), ExactDiffusionCombine(), BeyondCentralCombine()):
+    register_rule(_rule)

@@ -14,6 +14,11 @@ Two numerically-identical implementations of one circulant gossip round
     composes freely with vmap/grad/scan, so the deep-learning trainer
     (repro.distributed.aggregation) uses this form.
 
+Both bottom out in the unified consensus layer's K+1-way combine
+(:func:`repro.distributed.consensus.combine_blocks`) — the same primitive
+the AltGDmin mesh runtime fuses into one ``gossip_combine`` dispatch per
+round on the pallas backends.
+
 DESIGN.md §3 hardware adaptation: production topologies are rings/tori
 (fabric-native); arbitrary Erdős–Rényi graphs stay in the simulator.
 """
@@ -23,8 +28,8 @@ import functools
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
+from repro.distributed.consensus import GossipCombine, get_rule
 from repro.utils.compat import shard_map as _shard_map
 
 
@@ -33,9 +38,7 @@ def ring_weights(shifts: Sequence[int] = (-1, 1),
     """(self_weight, per-shift weight) for a symmetric circulant mixer.
     Defaults to equal weights 1/(k+1) — the paper's equal-neighbour rule on
     a regular ring."""
-    k = len(shifts)
-    sw = self_weight if self_weight is not None else 1.0 / (k + 1)
-    return sw, (1.0 - sw) / k
+    return GossipCombine._ring_weights(shifts, self_weight)
 
 
 def torus_shifts(rows: int, cols: int):
@@ -47,20 +50,17 @@ def torus_shifts(rows: int, cols: int):
 # ---------------------------------------------------------------- pjit form
 
 def roll_gossip(tree, T_con: int, shifts: Sequence[int] = (-1, 1),
-                self_weight: float | None = None):
+                self_weight: float | None = None, *,
+                backend: str = "xla-ref"):
     """T_con gossip rounds over the leading (node) axis of every leaf."""
     if T_con == 0:
         return tree
+    rule = get_rule("gossip")
     sw, wn = ring_weights(shifts, self_weight)
 
     def one_round(t):
-        def mix(x):
-            acc_dt = jnp.promote_types(x.dtype, jnp.float32)
-            acc = sw * x.astype(acc_dt)
-            for s in shifts:
-                acc = acc + wn * jnp.roll(x, -s, axis=0).astype(acc_dt)
-            return acc.astype(x.dtype)
-        return jax.tree.map(mix, t)
+        return jax.tree.map(
+            lambda x: rule.roll_round(x, shifts, sw, wn, backend=backend), t)
 
     for _ in range(T_con):
         tree = one_round(tree)
@@ -69,38 +69,31 @@ def roll_gossip(tree, T_con: int, shifts: Sequence[int] = (-1, 1),
 
 # ---------------------------------------------------------- shard_map form
 
-def _ppermute_round(z, axis_name, L, shifts, sw, wn):
-    acc_dt = jnp.promote_types(z.dtype, jnp.float32)
-    acc = sw * z.astype(acc_dt)
-    for s in shifts:
-        perm = [(i, (i - s) % L) for i in range(L)]   # receive from i+s
-        acc = acc + wn * jax.lax.ppermute(z, axis_name, perm).astype(acc_dt)
-    return acc.astype(z.dtype)
-
-
 def shard_map_gossip(Z, mesh, axis_name: str, T_con: int,
                      shifts: Sequence[int] = (-1, 1),
-                     self_weight: float | None = None):
+                     self_weight: float | None = None, *,
+                     backend: str = "xla-ref"):
     """AGREE on hardware: Z's leading axis (length = mesh axis size) is
     sharded over ``axis_name``; every round each device exchanges its block
-    with its ring neighbours via collective-permute."""
+    with its ring neighbours via collective-permute, then combines them
+    (one fused K+1-way dispatch per round on the pallas backends)."""
     L = mesh.shape[axis_name]
     if Z.shape[0] != L:
         raise ValueError(f"leading axis {Z.shape[0]} != mesh axis {L}")
-    sw, wn = ring_weights(shifts, self_weight)
+    mixer = get_rule("gossip").make_mesh_mixer(
+        axis_name, L, T_con, shifts, self_weight, backend=backend)
     spec = jax.sharding.PartitionSpec(axis_name)
 
     @functools.partial(_shard_map, mesh=mesh, in_specs=spec,
-                       out_specs=spec, axis_names={axis_name})
+                       out_specs=spec, axis_names={axis_name},
+                       check_rep=backend == "xla-ref")
     def run(z):
-        def body(carry, _):
-            return _ppermute_round(carry, axis_name, L, shifts, sw, wn), None
-        out, _ = jax.lax.scan(body, z, None, length=T_con)
-        return out
+        return mixer(z)
 
     return run(Z)
 
 
 def axis_mean(tree, axis_name: str):
     """Fusion-center baseline inside shard_map: exact pmean."""
-    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
+    mix = get_rule("central").make_mesh_mixer(axis_name, 0)
+    return jax.tree.map(mix, tree)

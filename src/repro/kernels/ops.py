@@ -55,13 +55,21 @@ def default_backend(*, extra_env: str | None = None,
     ``extra_env`` (if given) → ``REPRO_KERNEL_BACKEND`` → ``pallas`` on
     TPU / ``off_tpu_fallback`` elsewhere.  The AltGDmin engine shares
     this chain with ``extra_env="REPRO_ENGINE_BACKEND"`` and an
-    ``xla-ref`` fallback (seed-numerics default off-TPU)."""
+    ``xla-ref`` fallback (seed-numerics default off-TPU).
+
+    Env values are validated here, at resolve time, so a typo fails
+    with a message naming the offending variable instead of surfacing
+    obscurely deep in op dispatch."""
     if _default_backend is not None:
         return _default_backend
     for var in (extra_env, "REPRO_KERNEL_BACKEND"):
         env = os.environ.get(var) if var else None
         if env:
-            return _validate(env)
+            if env not in BACKENDS:
+                raise ValueError(
+                    f"invalid backend {env!r} in environment variable "
+                    f"{var}; valid backends: {BACKENDS}")
+            return env
     return "pallas" if _on_tpu() else _validate(off_tpu_fallback)
 
 

@@ -207,8 +207,10 @@ def test_mesh_substrate_validation():
     ring = dataclasses.replace(
         mesh_spec, topology=TopologySpec(family="ring",
                                          weights="circulant"))
+    # dec/dgd gained mesh runtimes (PR 3); the combine-rule variants
+    # are still simulator-only
     with pytest.raises(ValueError, match="no mesh runtime"):
-        run_experiment(_with_solver(ring, "dgd_altgdmin"), key=0)
+        run_experiment(_with_solver(ring, "exact_diffusion"), key=0)
     if jax.device_count() != TINY.problem.L:
         with pytest.raises(ValueError, match="device"):
             run_experiment(ring, key=0)

@@ -1,0 +1,334 @@
+"""Unified consensus layer (CombineRule): lowering equivalences, the
+per-solver bit-identical-trajectory acceptance (the refactor must not
+change any existing solver's arithmetic), the comm signatures, and the
+two new combine-rule solvers (exact_diffusion / beyond_central)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.api import (ExperimentSpec, InitSpec, ProblemSpec, SolverSpec,
+                       TopologySpec, get_solver, run_experiment)
+from repro.core.agree import agree
+from repro.core.engine import AltgdminEngine, ref_grad_U, ref_minimize_B
+from repro.core.spectral import _qr_pos
+from repro.distributed import (CombineRule, CommSignature, circulant_weights,
+                               combine_blocks, get_rule, metropolis_weights,
+                               register_rule, ring)
+from repro.distributed.consensus import (BeyondCentralCombine,
+                                         ExactDiffusionCombine,
+                                         GossipCombine, stacked_product)
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------- combine_blocks
+
+def test_combine_blocks_matches_ref_and_fused():
+    k = jax.random.PRNGKey(0)
+    z = jax.random.normal(k, (16, 8), jnp.float32)
+    nbrs = [jax.random.normal(jax.random.fold_in(k, i), (16, 8), jnp.float32)
+            for i in range(3)]
+    sw, wn = 0.25, 0.25
+    want = ref.ref_gossip_combine(z, jnp.stack(nbrs), sw, wn)
+    unfused = combine_blocks(z, nbrs, sw, wn, backend="xla-ref")
+    fused = combine_blocks(z, nbrs, sw, wn, backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_combine_blocks_f64_stays_exact():
+    """x64 policy: float64 operands never take the f32-accumulating
+    fused kernel, even on pallas backends."""
+    z = jax.random.normal(jax.random.PRNGKey(1), (8, 4), jnp.float64)
+    nbrs = [jnp.roll(z, s, axis=0) for s in (-1, 1)]
+    sw, wn = 1 / 3, 1 / 3
+    exact = sw * z + wn * nbrs[0] + wn * nbrs[1]
+    out = combine_blocks(z, nbrs, sw, wn, backend="pallas-interpret")
+    assert out.dtype == jnp.float64
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exact))
+
+
+# ------------------------------------------------- simulator lowerings
+
+def _ring_setup(L=8, dtype=jnp.float64):
+    W = jnp.asarray(circulant_weights(L, (-1, 1)), dtype)
+    Z = jax.random.normal(jax.random.PRNGKey(2), (L, 6, 3), dtype)
+    return W, Z
+
+
+def test_gossip_sim_lowering_bit_identical_to_agree():
+    W, Z = _ring_setup()
+    for t_con in (0, 1, 4):
+        mix = get_rule("gossip").make_sim_mixer(W, t_con, backend="xla-ref")
+        np.testing.assert_array_equal(np.asarray(mix(Z)),
+                                      np.asarray(agree(Z, W, t_con)))
+
+
+def test_gossip_sim_fused_is_power_combine():
+    """Fused sim lowering ≡ the precomputed W^{T_con} mix_nodes combine
+    (the engine's PR-1 hoist), bit-for-bit."""
+    W, Z = _ring_setup(dtype=jnp.float32)
+    t_con = 3
+    mix = get_rule("gossip").make_sim_mixer(W, t_con,
+                                            backend="pallas-interpret")
+    Wp = jnp.linalg.matrix_power(W.astype(jnp.float32), t_con)
+    want = ops.mix_nodes(Z, Wp, backend="pallas-interpret").astype(Z.dtype)
+    np.testing.assert_array_equal(np.asarray(mix(Z)), np.asarray(want))
+    # and it is genuinely close to the exact sequential product
+    np.testing.assert_allclose(np.asarray(mix(Z)),
+                               np.asarray(agree(Z, W, t_con)),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_gossip_sim_fused_f64_falls_back_exact():
+    W, Z = _ring_setup(dtype=jnp.float64)
+    mix = get_rule("gossip").make_sim_mixer(W, 4, backend="pallas-interpret")
+    np.testing.assert_array_equal(np.asarray(mix(Z)),
+                                  np.asarray(agree(Z, W, 4)))
+
+
+def test_neighbor_sim_lowering_matches_dense_product():
+    g = ring(8)
+    adj = jnp.asarray(g.adj, jnp.float64)
+    M = adj / jnp.maximum(jnp.sum(adj, axis=1), 1.0)[:, None]
+    Z = jax.random.normal(jax.random.PRNGKey(3), (8, 5, 2), jnp.float64)
+    mix = get_rule("neighbor").make_sim_mixer(M, backend="xla-ref")
+    want = jnp.einsum("gh,h...->g...", M, Z)
+    np.testing.assert_array_equal(np.asarray(mix(Z)), np.asarray(want))
+
+
+def test_central_and_none_rules():
+    Z = jax.random.normal(jax.random.PRNGKey(4), (6, 4), jnp.float64)
+    mean = get_rule("central").make_sim_mixer()(Z)
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.broadcast_to(np.asarray(Z).mean(0),
+                                               Z.shape), rtol=1e-12)
+    assert get_rule("none").make_sim_mixer()(Z) is Z
+
+
+# ----------------------------------------- engine mixers route through
+
+def test_engine_mixers_are_rule_lowerings():
+    W, Z = _ring_setup()
+    eng = AltgdminEngine("xla-ref")
+    np.testing.assert_array_equal(
+        np.asarray(eng.make_mixer(W, 3)(Z)), np.asarray(agree(Z, W, 3)))
+    M = W  # any dense mixer
+    np.testing.assert_array_equal(
+        np.asarray(eng.make_neighbor_mixer(M)(Z)),
+        np.asarray(jnp.einsum("gh,h...->g...", M, Z)))
+
+
+# ------------------------------- per-solver bit-identical trajectories
+
+TINY = ExperimentSpec(
+    problem=ProblemSpec(d=36, T=24, r=3, n=22, L=8, kappa=1.5),
+    topology=TopologySpec(family="ring", weights="metropolis"),
+    init=InitSpec(T_pm=12, T_con=5),
+    solver=SolverSpec(name="dif_altgdmin", T_GD=40, T_con=2))
+
+
+def _pr2_reference_trajectory(name, mat, eta, T_GD, T_con):
+    """The pre-refactor (PR-2) per-iteration arithmetic, written out
+    inline: ref min-B/grad + sequential AGREE + QR.  The refactored
+    solvers must reproduce these trajectories bit-for-bit on xla-ref."""
+    U0, Xg, yg, W, adj = mat.init.U0, mat.Xg, mat.yg, mat.W, mat.adj
+    L = U0.shape[0]
+
+    def min_grad(U):
+        B = ref_minimize_B(U, Xg, yg)
+        return B, ref_grad_U(U, B, Xg, yg)
+
+    if name == "dif_altgdmin":
+        def step(U, _):
+            _, G = min_grad(U)
+            U_new, _ = _qr_pos(agree(U - (eta * L) * G, W, T_con))
+            return U_new, None
+    elif name == "dec_altgdmin":
+        def step(U, _):
+            _, G = min_grad(U)
+            U_new, _ = _qr_pos(U - (eta * L) * agree(G, W, T_con))
+            return U_new, None
+    elif name == "dgd_altgdmin":
+        deg = jnp.maximum(jnp.sum(adj, axis=1), 1.0)
+        M = adj / deg[:, None]
+
+        def step(U, _):
+            _, G = min_grad(U)
+            nbr = jnp.einsum("gh,h...->g...", M.astype(U.dtype), U)
+            U_new, _ = _qr_pos(nbr - eta * G)
+            return U_new, None
+    else:                                   # centralized
+        def step(U, _):
+            Ub = jnp.broadcast_to(U[None], (Xg.shape[0],) + U.shape)
+            B = ref_minimize_B(Ub, Xg, yg)
+            G = jnp.sum(ref_grad_U(Ub, B, Xg, yg), axis=0)
+            U_new, _ = _qr_pos(U - eta * G)
+            return U_new, None
+
+    U_init = U0[0] if name == "centralized_altgdmin" else U0
+    U_fin, _ = jax.lax.scan(step, U_init, None, length=T_GD)
+    return U_fin if name != "centralized_altgdmin" else U_fin[None]
+
+
+@pytest.mark.parametrize("name", ["dif_altgdmin", "dec_altgdmin",
+                                  "dgd_altgdmin", "centralized_altgdmin"])
+def test_solver_trajectories_bit_identical_through_combine_rule(name):
+    """Acceptance: every legacy solver routes its combines through
+    CombineRule with NO behavior change — trajectories equal the inline
+    PR-2 arithmetic exactly (no tolerance) on xla-ref."""
+    from repro.api.runner import materialize
+    spec = dataclasses.replace(TINY, solver=dataclasses.replace(
+        TINY.solver, name=name))
+    mat = materialize(spec, key=0)
+    solver = get_solver(name)
+    eng = AltgdminEngine("xla-ref")
+    got = solver.call(mat.init.U0, mat.Xg, mat.yg, mat.W, mat.adj,
+                      eta=mat.eta, T_GD=spec.solver.T_GD,
+                      T_con=spec.solver.T_con,
+                      U_star=mat.problem.U_star, engine=eng)
+    want = _pr2_reference_trajectory(name, mat, mat.eta, spec.solver.T_GD,
+                                     spec.solver.T_con)
+    np.testing.assert_array_equal(np.asarray(got.U_nodes), np.asarray(want))
+
+
+# --------------------------------------------------- new solver rules
+
+@pytest.mark.parametrize("name,solver_kw", [
+    ("exact_diffusion", {}),
+    ("beyond_central", {"local_steps": 2}),
+])
+def test_new_solvers_converge(name, solver_kw):
+    """Acceptance: exact_diffusion and beyond_central are registered
+    solvers runnable via run_experiment with decreasing sd_max."""
+    spec = dataclasses.replace(TINY, solver=SolverSpec(
+        name=name, T_GD=60, T_con=3, **solver_kw))
+    trace = run_experiment(spec, key=0)
+    assert np.all(np.isfinite(trace.sd_max))
+    assert trace.sd_max[-1] < 0.25 * trace.sd_max[0], (
+        name, trace.sd_max[0], trace.sd_max[-1])
+    # the tail of the trajectory keeps improving (not a one-step fluke)
+    assert trace.sd_max[-1] <= np.min(trace.sd_max) * 1.05
+
+
+def test_exact_diffusion_first_step_matches_dif():
+    """With ψ_prev initialized to U0 the τ=0 correction vanishes (up to
+    the one-ULP ``(ψ + U0) − U0`` round trip), so the first
+    exact-diffusion iterate matches Dif-AltGDmin's."""
+    from repro.api.runner import materialize
+    mat = materialize(TINY, key=0)
+    eng = AltgdminEngine("xla-ref")
+    kw = dict(eta=mat.eta, T_GD=1, T_con=2, U_star=mat.problem.U_star,
+              engine=eng)
+    from repro.core import dif_altgdmin, exact_diffusion_altgdmin
+    a = dif_altgdmin(mat.init.U0, mat.Xg, mat.yg, mat.W, **kw)
+    b = exact_diffusion_altgdmin(mat.init.U0, mat.Xg, mat.yg, mat.W, **kw)
+    np.testing.assert_allclose(np.asarray(a.U_nodes),
+                               np.asarray(b.U_nodes),
+                               rtol=1e-12, atol=1e-13)
+
+
+def test_exact_diffusion_correction_formula():
+    psi = jnp.ones((4, 2, 2)) * 3.0
+    psi_prev = jnp.ones((4, 2, 2))
+    U_prev = jnp.ones((4, 2, 2)) * 2.0
+    np.testing.assert_array_equal(
+        np.asarray(ExactDiffusionCombine.correct(psi, psi_prev, U_prev)),
+        np.asarray(psi + U_prev - psi_prev))
+
+
+def test_beyond_central_single_round_combine():
+    """The beyond_central rule combines with ONE mixing round no matter
+    what T_con says — that is the communication efficiency."""
+    W, Z = _ring_setup()
+    rule = BeyondCentralCombine()
+    for t_con in (1, 5, 10):
+        np.testing.assert_array_equal(
+            np.asarray(rule.make_sim_mixer(W, t_con, backend="xla-ref")(Z)),
+            np.asarray(agree(Z, W, 1)))
+        assert rule.signature(t_con).rounds_per_iter == 1
+
+
+# ------------------------------------------------------ comm signatures
+
+def test_comm_signatures():
+    assert get_rule("gossip").signature(7) == CommSignature("gossip", 7)
+    assert get_rule("neighbor").signature(7) == CommSignature("neighbor", 1)
+    assert get_rule("central").signature(3) == CommSignature("central", 1)
+    assert get_rule("none").signature(3) == CommSignature("none", 0)
+    assert get_rule("exact_diffusion").signature(4) == CommSignature(
+        "gossip", 4)
+
+
+def test_beyond_central_prices_cheaper_wall_clock():
+    """The signature reaches the API's time axis: beyond_central's
+    single-round exchange is cheaper per iteration than dif's T_con
+    AGREE rounds."""
+    dif = run_experiment(dataclasses.replace(
+        TINY, solver=SolverSpec(name="dif_altgdmin", T_GD=10, T_con=5)),
+        key=0)
+    bc = run_experiment(dataclasses.replace(
+        TINY, solver=SolverSpec(name="beyond_central", T_GD=10, T_con=5)),
+        key=0)
+    assert bc.time_axis[-1] < 0.5 * dif.time_axis[-1]
+    # ...but its local work is not free: local_steps scales the compute
+    # term of the axis
+    bc4 = run_experiment(dataclasses.replace(
+        TINY, solver=SolverSpec(name="beyond_central", T_GD=10, T_con=5,
+                                local_steps=4)), key=0)
+    assert bc4.time_axis[-1] > bc.time_axis[-1]
+
+
+def test_unconsumed_local_steps_rejected():
+    """A non-default local_steps on a solver that ignores the field must
+    raise instead of silently running without it."""
+    spec = dataclasses.replace(TINY, solver=SolverSpec(
+        name="dif_altgdmin", T_GD=5, local_steps=3))
+    with pytest.raises(ValueError, match="does not consume local_steps"):
+        run_experiment(spec, key=0)
+
+
+def test_registry_rejects_unknown_rule():
+    from repro.api import SolverDef, register_solver
+    with pytest.raises(ValueError, match="unknown combine rule"):
+        register_solver(SolverDef(name="bogus", fn=lambda: None,
+                                  combine="telepathy"))
+
+
+def test_rule_registry_open_and_duplicate_guard():
+    class Custom(GossipCombine):
+        name = "test_custom_rule"
+    try:
+        register_rule(Custom())
+    except ValueError:
+        pass                     # registered by an earlier in-process run
+    assert isinstance(get_rule("test_custom_rule"), CombineRule)
+    with pytest.raises(ValueError, match="already registered"):
+        register_rule(Custom())
+    with pytest.raises(ValueError, match="unknown combine rule"):
+        get_rule("no_such_rule")
+
+
+# ------------------------------------------------- env var validation
+
+def test_bad_backend_env_raises_with_var_name(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "palas")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_BACKEND"):
+        ops.default_backend()
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND")
+    monkeypatch.setenv("REPRO_ENGINE_BACKEND", "xla_ref")
+    from repro.core.engine import default_engine_backend
+    with pytest.raises(ValueError, match="REPRO_ENGINE_BACKEND"):
+        default_engine_backend()
+
+
+def test_stacked_product_zero_rounds_identity():
+    Z = jnp.ones((4, 2))
+    W = jnp.asarray(metropolis_weights(ring(4)))
+    assert stacked_product(Z, W, 0) is Z

@@ -2,11 +2,14 @@
 a subprocess with 512 fake devices — proves the production-mesh pipeline
 (mesh build, shardings, lower, compile, memory/cost/collective analyses,
 calibration) works from a clean process."""
+import os
 import json
 import subprocess
 import sys
 
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.mark.parametrize("arch,shape", [("mamba2-130m", "decode_32k")])
@@ -15,7 +18,7 @@ def test_dryrun_one_combo(tmp_path, arch, shape):
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
          "--shape", shape, "--mesh", "single", "--out", str(out)],
-        capture_output=True, text=True, cwd="/root/repo",
+        capture_output=True, text=True, cwd=REPO_ROOT,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
         timeout=1200)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-2000:]}"

@@ -2,6 +2,7 @@
 shard_map ppermute gossip ≡ roll_gossip (run in a subprocess with 8 fake
 devices, since device count is fixed at process start); aggregation
 strategy semantics."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -10,6 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 from repro.core.agree import agree
 from repro.distributed import (
@@ -75,7 +78,7 @@ SHARD_MAP_SCRIPT = textwrap.dedent("""
 
 def test_shard_map_gossip_equivalence_subprocess():
     r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
-                       capture_output=True, text=True, cwd="/root/repo",
+                       capture_output=True, text=True, cwd=REPO_ROOT,
                        timeout=300)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
     assert "OK" in r.stdout

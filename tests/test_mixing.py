@@ -1,0 +1,99 @@
+"""Mixing-matrix invariants (distributed/mixing.py) and the measured
+Proposition-1 contraction: the spread actually observed after AGREE must
+sit under the gamma(W)^T_con bound, graph by graph."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property test falls back to a fixed grid
+    st = None
+
+from repro.core.agree import agree
+from repro.distributed import (circulant_weights, equal_neighbor_weights,
+                               erdos_renyi, gamma, lazy_weights,
+                               metropolis_weights, path_graph, ring, star)
+from repro.distributed.mixing import is_doubly_stochastic
+
+
+# ------------------------------------------------------------ invariants
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 7])
+def test_metropolis_doubly_stochastic_on_irregular_er(seed):
+    """Metropolis–Hastings weights stay symmetric + doubly stochastic on
+    irregular Erdős–Rényi graphs (where the paper's equal-neighbor rule
+    loses double stochasticity)."""
+    g = erdos_renyi(14, 0.35, seed=seed)
+    degs = g.adj.sum(axis=1)
+    assert degs.min() != degs.max(), "want an irregular instance"
+    w = metropolis_weights(g)
+    assert is_doubly_stochastic(w)
+    assert np.allclose(w, w.T)
+    assert gamma(w) < 1.0
+
+
+@pytest.mark.parametrize("make,args", [
+    (erdos_renyi, (12, 0.4, 5)), (star, (9,)), (path_graph, (7,)),
+    (ring, (8,)),
+])
+def test_equal_neighbor_row_stochastic_everywhere(make, args):
+    """The equal-neighbor rule is row-stochastic and nonnegative on ANY
+    graph (that is all AGREE needs to be an average of neighbours);
+    double stochasticity is a bonus that requires regularity."""
+    w = equal_neighbor_weights(make(*args))
+    assert np.all(w >= -1e-12)
+    assert np.allclose(w.sum(axis=1), 1.0)
+
+
+def test_lazy_weights_beat_bipartite_periodicity():
+    """On a bipartite regular graph the zero-self-weight equal-neighbor
+    matrix has λ_min = −1 (γ = 1: values oscillate forever between the
+    two sides); the lazy mix always contracts."""
+    g = ring(4)                             # bipartite, 2-regular
+    assert np.isclose(gamma(equal_neighbor_weights(g)), 1.0)
+    assert gamma(lazy_weights(g, 0.5)) < 1.0
+
+
+@pytest.mark.parametrize("shifts", [(-1, 1), (-2, 2), (-1, 1, -3, 3)])
+def test_circulant_weights_doubly_stochastic(shifts):
+    w = circulant_weights(12, shifts)
+    assert is_doubly_stochastic(w)
+
+
+# ------------------------------------------------- measured Prop-1 bound
+
+def _check_prop1(t_con, seed):
+    """Proposition 1, measured: after T_con AGREE rounds with a symmetric
+    doubly-stochastic W the node spread (Frobenius deviation from the
+    preserved average) is ≤ γ(W)^T_con × the initial spread."""
+    L = 10
+    g = erdos_renyi(L, 0.45, seed=seed)
+    w = metropolis_weights(g)
+    gm = gamma(w)
+    z = jax.random.normal(jax.random.PRNGKey(seed), (L, 6), jnp.float64)
+    z_bar = np.asarray(z).mean(axis=0)
+    out = np.asarray(agree(z, jnp.asarray(w), t_con))
+    # average preserved (double stochasticity), spread contracted
+    np.testing.assert_allclose(out.mean(axis=0), z_bar, rtol=1e-9,
+                               atol=1e-12)
+    spread_in = np.linalg.norm(np.asarray(z) - z_bar)
+    spread_out = np.linalg.norm(out - z_bar)
+    assert spread_out <= gm ** t_con * spread_in * (1 + 1e-9), (
+        spread_out, gm ** t_con * spread_in)
+
+
+if st is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(t_con=st.integers(min_value=1, max_value=25),
+           seed=st.integers(min_value=0, max_value=50))
+    def test_prop1_measured_spread_under_gamma_bound(t_con, seed):
+        _check_prop1(t_con, seed)
+else:
+    @pytest.mark.parametrize("t_con,seed", [(1, 0), (3, 5), (10, 7),
+                                            (25, 11), (7, 42)])
+    def test_prop1_measured_spread_under_gamma_bound(t_con, seed):
+        _check_prop1(t_con, seed)

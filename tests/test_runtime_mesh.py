@@ -3,11 +3,14 @@ must match the simulator run with the circulant ring W bit-for-bit-ish
 (subprocess: 8 fake devices, one node per device), on every engine
 backend — the mesh runtime routes its min-B/gradient phases through the
 same AltgdminEngine as the simulator."""
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -64,7 +67,7 @@ SCRIPT = textwrap.dedent("""
 
 def test_mesh_runtime_matches_simulator():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
-                       capture_output=True, text=True, cwd="/root/repo",
+                       capture_output=True, text=True, cwd=REPO_ROOT,
                        timeout=1200)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
     assert "OK" in r.stdout
@@ -137,7 +140,124 @@ def test_mesh_through_engine_matches_simulator(backend):
     simulator to <= 1e-7 while routing min-B/grad through the engine —
     on the seed-numerics backend AND the fused kernel backend."""
     r = subprocess.run([sys.executable, "-c", ENGINE_SCRIPT, backend],
-                       capture_output=True, text=True, cwd="/root/repo",
+                       capture_output=True, text=True, cwd=REPO_ROOT,
                        timeout=1200)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
     assert f"OK {backend}" in r.stdout
+
+
+# ------------------------------------------- dec/dgd mesh runtimes
+
+DEC_DGD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import sys
+    sys.path.insert(0, "src")
+    import dataclasses
+    import numpy as np
+    from repro.api import (ExperimentSpec, ProblemSpec, TopologySpec,
+                           InitSpec, SolverSpec, EngineSpec,
+                           run_experiment)
+
+    solver, backend = sys.argv[1], sys.argv[2]
+    spec = ExperimentSpec(
+        problem=ProblemSpec(d=48, T=32, r=3, n=25, L=8, kappa=1.5),
+        topology=TopologySpec(family="ring", weights="circulant"),
+        init=InitSpec(T_pm=15, T_con=6),
+        solver=SolverSpec(name=solver, T_GD=60, T_con=2),
+        engine=EngineSpec(backend=backend))
+
+    sim = run_experiment(spec, key=0)
+    hw = run_experiment(dataclasses.replace(spec, substrate="mesh"),
+                        key=0)
+    drift = float(np.max(np.abs(np.asarray(hw.U_nodes)
+                                - np.asarray(sim.U_nodes))))
+    assert drift <= 1e-7, f"U drift {drift} for {solver} on {backend}"
+    np.testing.assert_allclose(hw.sd_max, sim.sd_max,
+                               rtol=1e-7, atol=1e-9)
+    print("OK", solver, backend, drift)
+""")
+
+
+@pytest.mark.parametrize("backend", ["xla-ref", "pallas-interpret"])
+@pytest.mark.parametrize("solver", ["dec_altgdmin", "dgd_altgdmin"])
+def test_dec_dgd_mesh_matches_simulator(solver, backend):
+    """Acceptance: the newly mesh-capable solvers (combine-then-adjust
+    and the DGD variation) match their simulator trajectories to <= 1e-7
+    on both the seed-numerics and the fused kernel backend."""
+    r = subprocess.run([sys.executable, "-c", DEC_DGD_SCRIPT, solver,
+                        backend],
+                       capture_output=True, text=True, cwd=REPO_ROOT,
+                       timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert f"OK {solver} {backend}" in r.stdout
+
+
+# ------------------------------- fused combine dispatch per gossip round
+
+FUSED_COMBINE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import sys
+    sys.path.insert(0, "src")
+    import jax.numpy as jnp, numpy as np
+    from repro.core import generate_problem, node_view, \\
+        decentralized_spectral_init
+    from repro.core.runtime import dif_altgdmin_mesh
+    from repro.distributed import circulant_weights
+    from repro.utils.compat import make_mesh
+    from repro.kernels import ops
+
+    # count trace-time gossip_combine dispatches: the round body of the
+    # mesh mixer must contain exactly ONE fused K+1-way combine (not K
+    # separate weighted-sum sweeps); lax.scan then runs it T_con times.
+    calls = {"n": 0}
+    orig = ops.gossip_combine
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+    ops.gossip_combine = counting
+
+    L, T_con = 8, 3
+    prob = generate_problem(jax.random.PRNGKey(0), d=32, T=16, r=3, n=20,
+                            L=L, kappa=1.5, dtype=jnp.float32)
+    Xg, yg = node_view(prob)
+    W = jnp.asarray(circulant_weights(L, (-1, 1)), jnp.float32)
+    init = decentralized_spectral_init(
+        jax.random.PRNGKey(1), Xg, yg, W, kappa=prob.kappa, mu=prob.mu,
+        r=prob.r, T_pm=10, T_con=4)
+    mesh = make_mesh((L,), ("nodes",))
+    U, B = dif_altgdmin_mesh(init.U0, Xg, yg, mesh, "nodes", eta=1e-4,
+                             T_GD=4, T_con=T_con,
+                             backend="pallas-interpret")
+    jax.block_until_ready(U)
+    assert calls["n"] == 1, \\
+        f"expected ONE fused combine in the gossip round body, " \\
+        f"got {calls['n']}"
+    assert np.all(np.isfinite(np.asarray(U)))
+
+    # xla-ref keeps the exact unfused chain: no fused dispatch at all
+    calls["n"] = 0
+    U2, _ = dif_altgdmin_mesh(init.U0, Xg, yg, mesh, "nodes", eta=1e-4,
+                              T_GD=4, T_con=T_con, backend="xla-ref")
+    jax.block_until_ready(U2)
+    assert calls["n"] == 0, calls["n"]
+    # and the fused rounds agree with the exact chain (f32 tolerance)
+    np.testing.assert_allclose(np.asarray(U), np.asarray(U2),
+                               rtol=2e-4, atol=2e-5)
+    print("OK fused-combine")
+""")
+
+
+def test_runtime_single_fused_combine_dispatch_per_round():
+    """Acceptance: on pallas backends the mesh runtime issues ONE fused
+    gossip_combine per gossip round (the K+1-way kernel) instead of the
+    T_con x K weighted-sum chain; xla-ref keeps the exact chain."""
+    r = subprocess.run([sys.executable, "-c", FUSED_COMBINE_SCRIPT],
+                       capture_output=True, text=True, cwd=REPO_ROOT,
+                       timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "OK fused-combine" in r.stdout

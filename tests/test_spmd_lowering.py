@@ -2,9 +2,12 @@
 the paper's diffusion aggregation must lower to collective-permute
 (neighbour gossip), the fusion-center baseline to all-reduce — the
 communication patterns of Alg. 3 vs AltGDmin, visible in the HLO."""
+import os
 import subprocess
 import sys
 import textwrap
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -41,7 +44,7 @@ SCRIPT = textwrap.dedent("""
 
 def test_diffusion_lowers_to_permutes_allreduce_to_allreduce():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
-                       capture_output=True, text=True, cwd="/root/repo",
+                       capture_output=True, text=True, cwd=REPO_ROOT,
                        timeout=1800)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
     assert "OK" in r.stdout
