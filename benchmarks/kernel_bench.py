@@ -124,12 +124,14 @@ CONSENSUS_SHAPES = (
 
 def bench_consensus(quick: bool = False, t_con: int = 3):
     """µs per gossip round of the mesh runtime's combine phase: the
-    fused K+1-way ``gossip_combine`` kernel (ONE dispatch per round)
-    vs the unfused weighted-sum chain (K separate axpy sweeps — the
-    pre-consensus-layer runtime path).  Neighbour blocks are held fixed
-    (the ppermute cost is identical for both variants and excluded);
-    interpret-mode timings are CPU validations, not TPU projections —
-    the dispatch count (1 vs K) is the trajectory metric."""
+    fused (K+1)-way ``gossip_combine`` kernel (ONE dispatch per round,
+    uniform ring weights AND the per-shift weighted form that arbitrary
+    topologies — Metropolis rows — lower to) vs the unfused weighted-sum
+    chain (K separate axpy sweeps — the pre-consensus-layer runtime
+    path).  Neighbour blocks are held fixed (the ppermute cost is
+    identical for all variants and excluded); interpret-mode timings are
+    CPU validations, not TPU projections — the dispatch count (1 vs K)
+    is the trajectory metric."""
     rows = []
     key = jax.random.PRNGKey(0)
     shapes = CONSENSUS_SHAPES[:1] if quick else CONSENSUS_SHAPES
@@ -140,13 +142,20 @@ def bench_consensus(quick: bool = False, t_con: int = 3):
                                  jnp.float32)
         sw = 1.0 / (K + 1)
         wn = (1.0 - sw) / K
+        w_uniform = jnp.asarray((sw,) + (wn,) * K, jnp.float32)
+        # a non-uniform Metropolis-style row (what an irregular-graph
+        # device actually feeds the kernel)
+        w_row = jax.nn.softmax(jax.random.normal(
+            jax.random.fold_in(key, 2), (K + 1,))).astype(jnp.float32)
 
-        @jax.jit
-        def fused_rounds(z, nbrs):
-            def body(carry, _):
-                return ops.gossip_combine(carry, nbrs, sw, wn,
-                                          backend="pallas-interpret"), None
-            return jax.lax.scan(body, z, None, length=t_con)[0]
+        def make_fused(w):
+            @jax.jit
+            def fused_rounds(z, nbrs):
+                def body(carry, _):
+                    return ops.gossip_combine(
+                        carry, nbrs, w, backend="pallas-interpret"), None
+                return jax.lax.scan(body, z, None, length=t_con)[0]
+            return fused_rounds
 
         @jax.jit
         def chain_rounds(z, nbrs):
@@ -158,7 +167,8 @@ def bench_consensus(quick: bool = False, t_con: int = 3):
             return jax.lax.scan(body, z, None, length=t_con)[0]
 
         for variant, fn, dispatches in (
-                ("fused_gossip_combine", fused_rounds, 1),
+                ("fused_gossip_combine", make_fused(w_uniform), 1),
+                ("fused_weighted_combine", make_fused(w_row), 1),
                 ("unfused_chain", chain_rounds, K)):
             us = _time(fn, z, nbrs, reps=2 if quick else 5) / t_con
             rows.append(dict(cfg, variant=variant, t_con=t_con,

@@ -66,8 +66,11 @@ def main() -> None:
         "rows": engine_rows,
         "consensus": {
             "description": "mesh-runtime gossip combine, µs/round: the "
-                           "fused K+1-way gossip_combine dispatch vs "
-                           "the unfused K-sweep weighted-sum chain",
+                           "fused (K+1)-way gossip_combine dispatch "
+                           "(uniform ring weights AND the per-shift "
+                           "weighted form arbitrary topologies lower "
+                           "to) vs the unfused K-sweep weighted-sum "
+                           "chain",
             "rows": consensus_rows,
         },
     }

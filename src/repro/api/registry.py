@@ -113,7 +113,8 @@ register_solver(SolverDef(
 
 register_solver(SolverDef(
     name="centralized_altgdmin", fn=_alg.centralized_altgdmin,
-    topology="none", combine="central", decentralized=False))
+    topology="none", combine="central", decentralized=False,
+    mesh_fn=_runtime.centralized_altgdmin_mesh))
 
 register_solver(SolverDef(
     name="dgd_altgdmin", fn=_alg.dgd_altgdmin,
@@ -122,9 +123,11 @@ register_solver(SolverDef(
 
 register_solver(SolverDef(
     name="exact_diffusion", fn=_alg.exact_diffusion_altgdmin,
-    topology="W", combine="exact_diffusion"))
+    topology="W", combine="exact_diffusion",
+    mesh_fn=_runtime.exact_diffusion_mesh))
 
 register_solver(SolverDef(
     name="beyond_central", fn=_alg.beyond_central_altgdmin,
     topology="W", combine="beyond_central",
+    mesh_fn=_runtime.beyond_central_mesh,
     spec_kwargs=("local_steps",)))

@@ -11,11 +11,14 @@ Substrates:
   * ``"simulator"`` — the single-host node-batched simulator
     (:mod:`repro.core.altgdmin`), any topology/solver;
   * ``"mesh"``      — the shard_map runtime (one node per device,
-    AGREE = collective-permute ring gossip).  Requires a mesh-capable
-    solver, circulant weights, and L = available devices; the min-B and
-    gradient phases route through the same :class:`AltgdminEngine`
-    backend as the simulator, so ``pallas``/``pallas-interpret`` reach
-    hardware nodes.
+    AGREE = collective-permute gossip).  Requires a mesh-capable solver
+    and L = available devices; ANY weight scheme runs — circulant
+    weights lower to the native uniform ring form, and every other
+    scheme (metropolis/equal_neighbor/lazy on arbitrary graphs) is
+    decomposed into per-shift, per-device weights by the consensus
+    layer.  The min-B and gradient phases route through the same
+    :class:`AltgdminEngine` backend as the simulator, so
+    ``pallas``/``pallas-interpret`` reach hardware nodes.
 
 Determinism: the problem and init keys are derived from the caller's
 ``key`` by ``fold_in``, so two specs that share problem/topology/init
@@ -38,6 +41,7 @@ from repro.core.altgdmin import RunResult, resolve_eta
 from repro.core.problem import (MTRLProblem, generate_problem, node_view,
                                 split_samples)
 from repro.core.spectral import SpectralInit, decentralized_spectral_init
+from repro.distributed import consensus as _consensus
 from repro.distributed.graphs import Graph
 from repro.utils.compat import make_mesh
 
@@ -159,16 +163,18 @@ def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
     """
     from repro.core.engine import resolve_engine
     solver = get_solver(spec.solver.name)
-    mat = materialize(spec, key) if materialized is None else materialized
-    eta = _resolve_spec_eta(spec, mat.init)
-    eng = resolve_engine(engine, spec.engine.backend,
-                         blk_d=spec.engine.blk_d)
+    # spec-only validation runs BEFORE the expensive materialization so
+    # an invalid sweep cell fails without paying the setup liturgy
     if (spec.solver.local_steps != 1
             and "local_steps" not in solver.spec_kwargs):
         raise ValueError(
             f"solver {solver.name!r} does not consume local_steps "
             f"(got local_steps={spec.solver.local_steps}); only solvers "
             f"declaring it in spec_kwargs honor the field")
+    mat = materialize(spec, key) if materialized is None else materialized
+    eta = _resolve_spec_eta(spec, mat.init)
+    eng = resolve_engine(engine, spec.engine.backend,
+                         blk_d=spec.engine.blk_d)
     if spec.substrate == "mesh":
         result = _run_mesh(spec, solver, mat, eng, eta)
     else:
@@ -192,10 +198,6 @@ def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
     if not solver.mesh_capable:
         raise ValueError(f"solver {solver.name!r} has no mesh runtime; "
                          f"use substrate='simulator'")
-    if topo.weights != "circulant":
-        raise ValueError(
-            f"substrate='mesh' gossips with collective-permutes, which "
-            f"implement circulant weights only (got {topo.weights!r})")
     if p.n_folds > 1:
         raise ValueError("substrate='mesh' does not support sample "
                          "splitting (n_folds > 1)")
@@ -204,8 +206,19 @@ def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
         raise ValueError(f"substrate='mesh' needs one device per node: "
                          f"L={p.L} but {n_dev} devices are available")
     mesh = make_mesh((p.L,), ("nodes",))
+    kw = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
+    if topo.weights == "circulant":
+        # mesh-native uniform weights: each shift one collective-permute
+        kw.update(shifts=topo.shifts, self_weight=topo.self_weight)
+    elif solver.topology == "adj":
+        # the solver averages neighbours (excl. self): lower the same
+        # row-stochastic adj/deg matrix the simulator driver builds
+        kw.update(W=np.asarray(_consensus.neighbor_average_matrix(mat.adj)))
+    else:
+        # arbitrary weighted topology: the consensus layer decomposes W
+        # into per-shift, per-device weights (metropolis/lazy/... rows)
+        kw.update(W=np.asarray(mat.W))
     return solver.mesh_fn(
         mat.init.U0, mat.Xg, mat.yg, mesh, "nodes", eta=eta,
         T_GD=spec.solver.T_GD, T_con=spec.solver.T_con,
-        shifts=topo.shifts, self_weight=topo.self_weight,
-        engine=eng, U_star=mat.problem.U_star)
+        engine=eng, U_star=mat.problem.U_star, **kw)

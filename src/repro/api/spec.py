@@ -66,7 +66,10 @@ class TopologySpec:
     ``erdos_renyi``, ``rows``/``cols`` to ``torus2d``, ``dim`` to
     ``hypercube``; the rest need only L (taken from the problem).
     ``weights="circulant"`` is the mesh-native scheme (each shift = one
-    collective-permute) and the only one the mesh substrate accepts.
+    collective-permute, uniform weights shared by every device); the
+    other schemes run on the mesh too — the consensus layer decomposes
+    their W into per-shift, per-device weights (one permute per distinct
+    cyclic shift of the sparsity pattern).
     """
     family: str = "erdos_renyi"
     p: float = 0.5

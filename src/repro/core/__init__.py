@@ -18,4 +18,5 @@ from repro.core import theory
 from repro.core import comm_model
 from repro.core.runtime import (
     dif_altgdmin_mesh, dec_altgdmin_mesh, dgd_altgdmin_mesh,
+    centralized_altgdmin_mesh, exact_diffusion_mesh, beyond_central_mesh,
 )

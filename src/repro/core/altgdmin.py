@@ -49,7 +49,8 @@ from repro.core.engine import (AltgdminEngine, ref_grad_U, ref_minimize_B,
                                resolve_engine)
 from repro.core.metrics import subspace_distance, consensus_spread
 from repro.core.spectral import _qr_pos
-from repro.distributed.consensus import ExactDiffusionCombine
+from repro.distributed.consensus import (ExactDiffusionCombine,
+                                         neighbor_average_matrix)
 
 
 class RunResult(NamedTuple):
@@ -264,8 +265,7 @@ def dgd_altgdmin(U0_nodes, Xg, yg, adj, *, eta: float, T_GD: int,
     Ũ_g ← QR( (1/deg_g) Σ_{g'∈N_g} U_g'^{(τ-1)} − η ∇f_g ).
     ``adj``: (L, L) adjacency (no self loops), per the paper's formula the
     neighbour average EXCLUDES the node itself."""
-    deg = jnp.maximum(jnp.sum(adj, axis=1), 1.0)
-    M = adj / deg[:, None]                    # row-stochastic neighbour avg
+    M = neighbor_average_matrix(adj)          # row-stochastic neighbour avg
     U_star_ = U_star if U_star is not None else U0_nodes[0]
     eng = resolve_engine(engine, backend)
     same_data = Xg.ndim == 4

@@ -1,23 +1,36 @@
 """AltGDmin on the production mesh — the paper's algorithms with
-nodes = mesh devices and AGREE = collective-permute ring gossip.
+nodes = mesh devices and AGREE = collective-permute gossip.
 
 This is the hardware counterpart of the simulator in core/altgdmin.py:
 each device holds ONE node's task shard (X_g, y_g) and subspace iterate
 U_g; per outer iteration it solves its local LS, takes the projected-GD
-pre-image, exchanges iterates (or gradients) with its ring neighbours via
-``lax.ppermute`` — nearest-neighbour on the ICI torus — and retracts with
-a local QR.  Numerically identical to the simulator run with the
-circulant ring W (tests/test_runtime_mesh.py), so every Theorem-1
-guarantee transfers with γ(W) = γ(ring).
+pre-image, exchanges iterates (or gradients) with its graph neighbours
+via ``lax.ppermute``, and retracts with a local QR.  Numerically
+identical to the simulator run with the same W
+(tests/test_runtime_mesh.py), so every Theorem-1 guarantee transfers
+with γ(W) of the actual topology.
 
-All three decentralized solvers share one shard_map skeleton
+Topologies: the consensus layer lowers ANY concrete mixing matrix to
+collective-permutes (``W=`` kwarg — one permute per distinct cyclic
+shift of W's sparsity pattern, each device combining with its own W
+row; see :func:`repro.distributed.consensus.mesh_weights_from_matrix`).
+Without ``W`` the historical uniform circulant of ``shifts`` /
+``self_weight`` runs (nearest-neighbour on the ICI torus).
+
+All six registered solvers share one shard_map skeleton
 (:func:`_altgdmin_mesh`) and differ only in the per-iteration update:
 
   * :func:`dif_altgdmin_mesh` — adapt-then-combine (Algorithm 3);
   * :func:`dec_altgdmin_mesh` — combine-then-adjust (gossip the
     gradients [9]);
   * :func:`dgd_altgdmin_mesh` — DGD's self-excluding neighbour average
-    (Experiment 1 iii).
+    (Experiment 1 iii);
+  * :func:`centralized_altgdmin_mesh` — fusion center (exact gradient
+    ``psum``, AltGDmin [10]);
+  * :func:`exact_diffusion_mesh` — bias-corrected combine
+    (arXiv:2304.07358; the ψ correction state rides the scan carry);
+  * :func:`beyond_central_mesh` — ``local_steps`` local adapt steps then
+    ONE gossip round (arXiv:2512.22675).
 
 The min-B and gradient phases route through the same
 :class:`repro.core.engine.AltgdminEngine` as the simulator (``engine=``/
@@ -26,7 +39,7 @@ The min-B and gradient phases route through the same
 gossip round the K neighbour blocks arrive by collective-permute and are
 merged in ONE fused ``gossip_axpy.gossip_combine`` dispatch on the
 pallas backends (the unfused weighted-sum chain remains the xla-ref /
-float64 exact path).
+float64 exact path) — uniform or per-device weights alike.
 
 The federated property is structural: only Ŭ_g (d×r) crosses the wire;
 X_g, y_g, B_g never leave the device.
@@ -46,22 +59,26 @@ from jax.sharding import PartitionSpec as P
 from repro.core.engine import AltgdminEngine, resolve_engine
 from repro.core.metrics import consensus_spread, subspace_distance
 from repro.core.spectral import _qr_pos
-from repro.distributed.consensus import get_rule
+from repro.distributed.consensus import ExactDiffusionCombine, get_rule
 from repro.utils.compat import shard_map as _shard_map
 
 
 def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                    T_GD: int, make_update,
                    engine: AltgdminEngine | None,
-                   backend: str | None, U_star):
+                   backend: str | None, U_star, init_aux=None):
     """Shared shard_map skeleton for the decentralized mesh solvers.
 
-    ``make_update(eng) -> update(U, G)`` builds the per-iteration update
-    (this device's iterate + local gradient → new iterate) from the
-    resolved engine, so the closure can pick the engine's backend for
-    its fused combine; everything else — the local fused min-B +
-    gradient dispatch, the scan, the optional metrics all-gather, the
-    final min-B — is solver-independent.
+    ``make_update(eng) -> update(U, aux, min_grad)`` builds the
+    per-iteration update from the resolved engine: it receives this
+    device's iterate, the solver's auxiliary scan state (``None`` unless
+    ``init_aux`` is given — e.g. exact diffusion's ψ correction), and a
+    ``min_grad(U) -> (B, G)`` closure over the device's local data (ONE
+    fused kernel dispatch per call on the pallas backends), and returns
+    ``(U_new, aux_new)``.  Everything else — the scan, the optional
+    metrics all-gather, the final min-B — is solver-independent.
+    ``init_aux(U_local)`` seeds the auxiliary state from the device's
+    starting iterate.
     """
     from repro.core.altgdmin import RunResult
 
@@ -80,7 +97,7 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
 
     def local_min_grad(U, X, y):
         """Fused min-B + gradient — ONE kernel dispatch per device per
-        iteration on the pallas backends."""
+        call on the pallas backends."""
         B, G = eng.min_grad(U[None], X[None], y[None], X[None], y[None],
                             same_data=True)
         return B[0], G[0]
@@ -89,16 +106,21 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
         U = U0[0]                       # this device's node
         X, y = Xg[0], yg[0]
 
-        def step(U, _):
-            _, G = local_min_grad(U, X, y)
-            U_new = update(U, G)
-            if not with_metrics:
-                return U_new, None
-            U_all = jax.lax.all_gather(U_new, axis_name)     # (L, d, r)
-            return U_new, (subspace_distance(U_new, U_star),
-                           consensus_spread(U_all))
+        def mg(U_):
+            return local_min_grad(U_, X, y)
 
-        U_fin, metrics = jax.lax.scan(step, U, None, length=T_GD)
+        def step(carry, _):
+            U, aux = carry
+            U_new, aux_new = update(U, aux, mg)
+            if not with_metrics:
+                return (U_new, aux_new), None
+            U_all = jax.lax.all_gather(U_new, axis_name)     # (L, d, r)
+            return (U_new, aux_new), (subspace_distance(U_new, U_star),
+                                      consensus_spread(U_all))
+
+        aux0 = init_aux(U) if init_aux is not None else None
+        (U_fin, _), metrics = jax.lax.scan(step, (U, aux0), None,
+                                           length=T_GD)
         B_fin = local_min_B(U_fin, X, y)
         if not with_metrics:
             return U_fin[None], B_fin[None]
@@ -126,13 +148,15 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
 
 def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                       T_GD: int, T_con: int,
-                      shifts=(-1, 1), self_weight=None,
+                      shifts=(-1, 1), self_weight=None, W=None,
                       engine: AltgdminEngine | None = None,
                       backend: str | None = None, U_star=None):
     """Algorithm 3 on the mesh: adapt (local projected-GD pre-image),
     THEN combine (T_con gossip rounds on the updated iterate), then the
     QR retraction.  U0: (L, d, r); Xg: (L, tpn, n, d); yg: (L, tpn, n) —
     leading axis sharded over ``axis_name`` (one node per device).
+    ``W=`` gossips over an arbitrary concrete mixing matrix; otherwise
+    the uniform circulant of ``shifts``/``self_weight``.
     Returns (U_nodes, B_nodes) with the same layouts, or a
     :class:`~repro.core.altgdmin.RunResult` when ``U_star`` is given."""
     L = mesh.shape[axis_name]
@@ -140,12 +164,14 @@ def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
 
     def make_update(eng):
         gossip = get_rule("gossip").make_mesh_mixer(
-            axis_name, L, T_con, shifts, self_weight, backend=eng.backend)
+            axis_name, L, T_con, shifts, self_weight, W=W,
+            backend=eng.backend)
 
-        def update(U, G):
+        def update(U, aux, mg):
+            _, G = mg(U)
             U_breve = U - eta_L * G                  # local adapt
             U_tilde = gossip(U_breve)                # combine (diffusion)
-            return _qr_pos(U_tilde)[0]               # projection
+            return _qr_pos(U_tilde)[0], aux          # projection
         return update
 
     return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
@@ -155,23 +181,25 @@ def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
 
 def dec_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                       T_GD: int, T_con: int,
-                      shifts=(-1, 1), self_weight=None,
+                      shifts=(-1, 1), self_weight=None, W=None,
                       engine: AltgdminEngine | None = None,
                       backend: str | None = None, U_star=None):
     """Dec-AltGDmin [9] on the mesh: combine-then-adjust — T_con gossip
     rounds on the *gradients*, then the projected-GD step with the
-    gossiped estimate.  Same layouts/returns as
+    gossiped estimate.  Same layouts/returns/topology kwargs as
     :func:`dif_altgdmin_mesh`."""
     L = mesh.shape[axis_name]
     eta_L = eta * L
 
     def make_update(eng):
         gossip = get_rule("gossip").make_mesh_mixer(
-            axis_name, L, T_con, shifts, self_weight, backend=eng.backend)
+            axis_name, L, T_con, shifts, self_weight, W=W,
+            backend=eng.backend)
 
-        def update(U, G):
+        def update(U, aux, mg):
+            _, G = mg(U)
             G_hat = gossip(G)                        # consensus on grads
-            return _qr_pos(U - eta_L * G_hat)[0]
+            return _qr_pos(U - eta_L * G_hat)[0], aux
         return update
 
     return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
@@ -181,24 +209,119 @@ def dec_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
 
 def dgd_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                       T_GD: int, T_con: int = 1,
-                      shifts=(-1, 1), self_weight=None,
+                      shifts=(-1, 1), self_weight=None, W=None,
                       engine: AltgdminEngine | None = None,
                       backend: str | None = None, U_star=None):
     """DGD-variation on the mesh (Experiment 1 iii):
-    Ũ_g ← QR((1/K) Σ_s U_{g+s} − η ∇f_g) — ONE self-excluding neighbour
-    exchange per iteration (the circulant graph of ``shifts`` is
-    K-regular, so the simulator's (1/deg) adjacency average is exactly
-    the equal-weight shift average).  ``T_con``/``self_weight`` are
-    accepted for signature uniformity and ignored: the rule is a single
-    round with structurally zero self weight."""
+    Ũ_g ← QR((1/deg_g) Σ_{g'∈N_g} U_g' − η ∇f_g) — ONE self-excluding
+    neighbour exchange per iteration.  Without ``W`` the circulant graph
+    of ``shifts`` is K-regular, so the simulator's (1/deg) adjacency
+    average is exactly the equal-weight shift average; pass ``W=`` the
+    precomputed row-stochastic neighbour matrix (adj/deg, zero diagonal)
+    for irregular graphs.  ``T_con``/``self_weight`` are accepted for
+    signature uniformity and ignored: the rule is a single round with
+    structurally zero self weight."""
     L = mesh.shape[axis_name]
 
     def make_update(eng):
         nbr_mix = get_rule("neighbor").make_mesh_mixer(
-            axis_name, L, 1, shifts, backend=eng.backend)
+            axis_name, L, 1, shifts, W=W, backend=eng.backend)
 
-        def update(U, G):
-            return _qr_pos(nbr_mix(U) - eta * G)[0]
+        def update(U, aux, mg):
+            _, G = mg(U)
+            return _qr_pos(nbr_mix(U) - eta * G)[0], aux
+        return update
+
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star)
+
+
+def centralized_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *,
+                              eta: float, T_GD: int, T_con: int = 0,
+                              shifts=(), self_weight=None, W=None,
+                              engine: AltgdminEngine | None = None,
+                              backend: str | None = None, U_star=None):
+    """AltGDmin [10] with a fusion center on the mesh: every device
+    computes its local gradient, the exact sum arrives by one ``psum``
+    (the all-reduce the fusion center amounts to), and all devices take
+    the identical projected-GD step.  U0's node axis is broadcast from
+    node 0 so every device starts (and stays) on the same iterate —
+    the returned U_nodes rows are all equal to the simulator's single U.
+    ``T_con``/``shifts``/``self_weight``/``W`` are accepted for mesh_fn
+    signature uniformity and ignored (no graph: the combine is exact)."""
+    U0 = jnp.broadcast_to(U0[:1], U0.shape)
+
+    def make_update(eng):
+        def update(U, aux, mg):
+            _, G = mg(U)
+            grad = jax.lax.psum(G, axis_name)        # fusion-center sum
+            return _qr_pos(U - eta * grad)[0], aux
+        return update
+
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star)
+
+
+def exact_diffusion_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                         T_GD: int, T_con: int,
+                         shifts=(-1, 1), self_weight=None, W=None,
+                         engine: AltgdminEngine | None = None,
+                         backend: str | None = None, U_star=None):
+    """Exact Subspace Diffusion (arXiv:2304.07358) on the mesh:
+    adapt-correct-combine.  The previous adapt state ψ rides the scan
+    carry as ONE extra (d, r) buffer per device; per iteration
+    ψ = U − ηL∇f, φ = ψ + U − ψ_prev (the bias correction — vanishing at
+    τ=0 where ψ_prev = U0), then T_con gossip rounds on φ and the QR
+    retraction.  Same layouts/returns/topology kwargs as
+    :func:`dif_altgdmin_mesh`."""
+    L = mesh.shape[axis_name]
+    eta_L = eta * L
+
+    def make_update(eng):
+        gossip = get_rule("exact_diffusion").make_mesh_mixer(
+            axis_name, L, T_con, shifts, self_weight, W=W,
+            backend=eng.backend)
+
+        def update(U, psi_prev, mg):
+            _, G = mg(U)
+            psi = U - eta_L * G                          # adapt
+            phi = ExactDiffusionCombine.correct(psi, psi_prev, U)
+            return _qr_pos(gossip(phi))[0], psi          # combine+project
+        return update
+
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star,
+                          init_aux=lambda U: U)
+
+
+def beyond_central_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                        T_GD: int, T_con: int = 1, local_steps: int = 1,
+                        shifts=(-1, 1), self_weight=None, W=None,
+                        engine: AltgdminEngine | None = None,
+                        backend: str | None = None, U_star=None):
+    """Beyond Centralization (arXiv:2512.22675) on the mesh:
+    ``local_steps`` full local adapt steps (fused min-B + projected GD +
+    retraction, no communication) per outer iteration, then ONE gossip
+    round — the wire carries a single d×r exchange per iteration
+    regardless of ``T_con`` (which the combine rule ignores by
+    construction).  Same layouts/returns/topology kwargs as
+    :func:`dif_altgdmin_mesh`."""
+    L = mesh.shape[axis_name]
+    eta_L = eta * L
+
+    def make_update(eng):
+        mix1 = get_rule("beyond_central").make_mesh_mixer(
+            axis_name, L, T_con, shifts, self_weight, W=W,
+            backend=eng.backend)
+
+        def update(U, aux, mg):
+            for _ in range(local_steps):             # local adapt epoch
+                _, G = mg(U)
+                U = _qr_pos(U - eta_L * G)[0]
+            return _qr_pos(mix1(U))[0], aux          # one combine round
         return update
 
     return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,

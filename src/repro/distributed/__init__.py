@@ -8,7 +8,8 @@ from repro.distributed.mixing import (
 )
 from repro.distributed.consensus import (
     CombineRule, CommSignature, COMBINE_RULES, register_rule, get_rule,
-    rule_names, combine_blocks,
+    rule_names, combine_blocks, mesh_weights_from_matrix,
+    neighbor_average_matrix,
 )
 from repro.distributed.gossip import (
     roll_gossip, shard_map_gossip, ring_weights, torus_shifts, axis_mean,

@@ -16,8 +16,11 @@ now owns all of them, with three lowered forms per rule:
   * **mesh** — one node per device inside ``shard_map``.  Each gossip
     round exchanges blocks by ``lax.ppermute`` and then combines them:
     the unfused lowering is the sequential weighted-sum chain, the fused
-    lowering is ONE K+1-way ``kernels/gossip_axpy.gossip_combine``
-    dispatch per round.
+    lowering is ONE (K+1)-way ``kernels/gossip_axpy.gossip_combine``
+    dispatch per round.  Any weighted graph lowers this way
+    (:func:`mesh_weights_from_matrix`): one permute per distinct cyclic
+    shift of W's sparsity pattern, each device combining with its own W
+    row — circulant matrices collapse to shared scalar weights.
   * **comm signature** — a :class:`CommSignature` consumed by
     :mod:`repro.core.comm_model` and the API's wall-clock pricing, so a
     rule's communication cost is declared next to its math.
@@ -43,6 +46,7 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,20 +83,26 @@ def _fused_wanted(backend: str, dtype) -> bool:
     return backend != "xla-ref" and jnp.dtype(dtype) != jnp.float64
 
 
-def combine_blocks(z, neighbors: Sequence[jax.Array], w_self: float,
-                   w_nbr: float, *, backend: str = "xla-ref"):
-    """ONE K+1-way weighted combine ``z ← w_self·z + w_nbr·Σ_k nbr_k`` —
-    the primitive under every circulant lowering (mesh ppermute rounds,
-    trainer roll rounds).  Unfused: the sequential chain in the promoted
-    accumulator dtype; fused: a single ``gossip_combine`` dispatch."""
+def combine_blocks(z, neighbors: Sequence[jax.Array], weights, *,
+                   backend: str = "xla-ref"):
+    """ONE (K+1)-way weighted combine ``z ← w₀·z + Σ_k w_{k+1}·nbr_k`` —
+    the primitive under every mesh lowering (ppermute rounds, trainer
+    roll rounds).  ``weights`` is a length-K+1 sequence: Python floats
+    for uniform circulant weights, or a (K+1,) array slice of the
+    device's own W row for arbitrary weighted topologies.  Unfused: the
+    sequential chain in the promoted accumulator dtype; fused: a single
+    ``gossip_combine`` dispatch."""
     from repro.kernels import ops
-    if _fused_wanted(backend, z.dtype):
-        return ops.gossip_combine(z, jnp.stack(list(neighbors)),
-                                  w_self, w_nbr, backend=backend)
+    neighbors = list(neighbors)
+    if neighbors and _fused_wanted(backend, z.dtype):
+        return ops.gossip_combine(z, jnp.stack(neighbors), weights,
+                                  backend=backend)
     acc_dt = _acc_dtype(z.dtype)
-    acc = w_self * z.astype(acc_dt)
-    for nbr in neighbors:
-        acc = acc + w_nbr * nbr.astype(acc_dt)
+    w = (list(weights) if isinstance(weights, (tuple, list))
+         else list(jnp.asarray(weights).astype(acc_dt)))
+    acc = w[0] * z.astype(acc_dt)
+    for k, nbr in enumerate(neighbors):
+        acc = acc + w[k + 1] * nbr.astype(acc_dt)
     return acc.astype(z.dtype)
 
 
@@ -131,6 +141,49 @@ def node_mean(Z: jax.Array) -> jax.Array:
     return jnp.broadcast_to(m, Z.shape).astype(Z.dtype)
 
 
+def neighbor_average_matrix(adj):
+    """DGD's row-stochastic neighbour average M = D⁻¹A (zero diagonal,
+    isolated nodes guarded to degree 1).  ONE derivation shared by the
+    simulator driver and the mesh lowering — their ≤1e-7 parity depends
+    on both sides using the same matrix."""
+    deg = jnp.maximum(jnp.sum(adj, axis=1), 1.0)
+    return adj / deg[:, None]
+
+
+def mesh_weights_from_matrix(W) -> tuple[tuple[int, ...], np.ndarray]:
+    """Decompose a concrete (L, L) mixing matrix into cyclic-shift form:
+    ``(shifts, table)`` with ``table[i] = [W_ii, W_{i,(i+s1)%L}, ...]``.
+
+    Every entry of W lies on exactly one cyclic diagonal (edge (i, j) on
+    shift ``(j−i) mod L``), so ANY weighted graph lowers to one
+    ``lax.ppermute`` per distinct shift plus one (K+1)-way weighted
+    combine — a circulant matrix needs exactly its own |shifts|, an
+    irregular graph up to L−1.  Shifts are reported as signed
+    representatives in (−L/2, L/2] and sorted, so a symmetric ring
+    decomposes to the runtime's historical (−1, 1) order.
+
+    W must be host-concrete (topology is static metadata, never traced).
+    """
+    try:
+        Wn = np.asarray(W)
+    except Exception as e:                       # jax TracerConversionError
+        raise ValueError(
+            "mesh_weights_from_matrix needs a concrete mixing matrix — "
+            "topology is static metadata and cannot be traced") from e
+    if Wn.ndim != 2 or Wn.shape[0] != Wn.shape[1]:
+        raise ValueError(f"mixing matrix must be square, got {Wn.shape}")
+    L = Wn.shape[0]
+    idx = np.arange(L)
+    shifts = sorted(
+        (s if s <= L // 2 else s - L)
+        for s in range(1, L) if np.any(Wn[idx, (idx + s) % L] != 0))
+    table = np.empty((L, len(shifts) + 1), dtype=Wn.dtype)
+    table[:, 0] = np.diag(Wn)
+    for k, s in enumerate(shifts):
+        table[:, k + 1] = Wn[idx, (idx + s) % L]
+    return tuple(shifts), table
+
+
 # ----------------------------------------------------------------------
 # CombineRule
 # ----------------------------------------------------------------------
@@ -140,9 +193,12 @@ class CombineRule:
 
     ``make_sim_mixer(W, T_con, backend=...)`` returns the simulator
     closure ``Z (L, ...) ↦ combined Z``; ``make_mesh_mixer(...)`` the
-    per-device closure used inside ``shard_map`` (circulant topologies —
-    each shift is one collective-permute); ``signature(T_con)`` the comm
-    cost.  Subclasses override the pieces that differ.
+    per-device closure used inside ``shard_map`` — pass ``W=`` for an
+    arbitrary weighted topology (each distinct cyclic shift of W's
+    sparsity pattern becomes one collective-permute, each device combines
+    with its own W row), or ``shifts``/``self_weight`` for the uniform
+    circulant form; ``signature(T_con)`` the comm cost.  Subclasses
+    override the pieces that differ.
     """
 
     name: str = "base"
@@ -158,7 +214,7 @@ class CombineRule:
     def make_mesh_mixer(self, axis_name: str, L: int, T_con: int,
                         shifts: Sequence[int] = (-1, 1),
                         self_weight: float | None = None, *,
-                        backend: str = "xla-ref") -> Callable:
+                        W=None, backend: str = "xla-ref") -> Callable:
         raise NotImplementedError
 
     # ------------------------------------------------------- signature
@@ -175,25 +231,53 @@ class CombineRule:
         return sw, (1.0 - sw) / k
 
     @classmethod
+    def _mesh_weights(cls, L: int, shifts: Sequence[int],
+                      self_weight: float | None, W):
+        """Resolve the mesh lowering's (shifts, weights) pair.
+
+        With ``W``: decompose the actual mixing matrix — identical rows
+        collapse to shared Python-float weights (the circulant fast
+        path, no per-device gather), otherwise the full (L, K+1) table
+        is kept and each device selects its row inside the round.
+        Without ``W``: the historical uniform circulant weights of
+        ``shifts``/``self_weight``."""
+        if W is None:
+            sw, wn = cls._ring_weights(shifts, self_weight)
+            return tuple(shifts), (sw,) + (wn,) * len(shifts)
+        shifts_, table = mesh_weights_from_matrix(W)
+        if table.shape[0] != L:
+            raise ValueError(f"mixing matrix is {table.shape[0]}×"
+                             f"{table.shape[0]} but the mesh axis has "
+                             f"{L} devices")
+        if np.all(table == table[0]):
+            return shifts_, tuple(float(x) for x in table[0])
+        return shifts_, jnp.asarray(table)
+
+    @classmethod
     def _mesh_round(cls, z, axis_name: str, L: int,
-                    shifts: Sequence[int], sw: float, wn: float,
-                    backend: str):
+                    shifts: Sequence[int], weights, backend: str):
         """One gossip round on hardware: K collective-permutes to fetch
-        neighbour blocks, then ONE combine (fused on pallas backends)."""
+        neighbour blocks, then ONE (K+1)-way combine (fused on pallas
+        backends).  ``weights`` is a shared scalar tuple (uniform /
+        circulant) or an (L, K+1) table — then each device picks its own
+        row by ``axis_index`` (arbitrary weighted topology)."""
+        w = (weights if isinstance(weights, tuple)
+             else weights[jax.lax.axis_index(axis_name)])
         nbrs = []
         for s in shifts:
             perm = [(i, (i - s) % L) for i in range(L)]   # receive from i+s
             nbrs.append(jax.lax.ppermute(z, axis_name, perm))
-        return combine_blocks(z, nbrs, sw, wn, backend=backend)
+        return combine_blocks(z, nbrs, w, backend=backend)
 
     @classmethod
-    def roll_round(cls, x, shifts: Sequence[int], sw: float, wn: float, *,
+    def roll_round(cls, x, shifts: Sequence[int], weights, *,
                    backend: str = "xla-ref"):
         """One gossip round in the pjit/trainer form: neighbour blocks
         come from ``jnp.roll`` over the leading node axis (XLA lowers the
-        sharded roll to the same collective-permute)."""
+        sharded roll to the same collective-permute).  ``weights``:
+        length-K+1 ``(w_self, w_shift1, ...)``."""
         nbrs = [jnp.roll(x, -s, axis=0) for s in shifts]
-        return combine_blocks(x, nbrs, sw, wn, backend=backend)
+        return combine_blocks(x, nbrs, weights, backend=backend)
 
 
 class GossipCombine(CombineRule):
@@ -217,15 +301,15 @@ class GossipCombine(CombineRule):
         return mix
 
     def make_mesh_mixer(self, axis_name, L, T_con, shifts=(-1, 1),
-                        self_weight=None, *, backend="xla-ref"):
-        sw, wn = self._ring_weights(shifts, self_weight)
+                        self_weight=None, *, W=None, backend="xla-ref"):
+        shifts_, weights = self._mesh_weights(L, shifts, self_weight, W)
         if T_con == 0:
             return lambda z: z
 
         def gossip(z):
             def round_(carry, _):
-                return self._mesh_round(carry, axis_name, L, shifts, sw,
-                                        wn, backend), None
+                return self._mesh_round(carry, axis_name, L, shifts_,
+                                        weights, backend), None
             out, _ = jax.lax.scan(round_, z, None, length=T_con)
             return out
         return gossip
@@ -245,11 +329,20 @@ class NeighborCombine(CombineRule):
         return lambda Z: stacked_dense_mix(Z, M, backend=backend)
 
     def make_mesh_mixer(self, axis_name, L, T_con=1, shifts=(-1, 1),
-                        self_weight=None, *, backend="xla-ref"):
-        # self weight is structurally zero: the average excludes the node
-        wn = 1.0 / len(shifts)
-        return lambda z: self._mesh_round(z, axis_name, L, shifts, 0.0,
-                                          wn, backend)
+                        self_weight=None, *, W=None, backend="xla-ref"):
+        """ONE neighbour-average round.  Without ``W`` the circulant
+        graph of ``shifts`` is K-regular, so the average is the
+        equal-weight shift combine with structurally zero self weight;
+        with ``W`` (the precomputed row-stochastic neighbour matrix,
+        zero diagonal) each device combines with its own row — the
+        irregular-graph form."""
+        if W is None:
+            shifts_ = tuple(shifts)
+            weights = (0.0,) + (1.0 / len(shifts),) * len(shifts)
+        else:
+            shifts_, weights = self._mesh_weights(L, shifts, self_weight, W)
+        return lambda z: self._mesh_round(z, axis_name, L, shifts_,
+                                          weights, backend)
 
     def signature(self, T_con: int) -> CommSignature:
         return CommSignature("neighbor", 1)
@@ -265,7 +358,7 @@ class CentralCombine(CombineRule):
         return node_mean
 
     def make_mesh_mixer(self, axis_name, L, T_con=0, shifts=(),
-                        self_weight=None, *, backend="xla-ref"):
+                        self_weight=None, *, W=None, backend="xla-ref"):
         return lambda z: jax.lax.pmean(z, axis_name)
 
     def signature(self, T_con: int) -> CommSignature:
@@ -282,7 +375,7 @@ class NoCombine(CombineRule):
         return lambda Z: Z
 
     def make_mesh_mixer(self, axis_name, L, T_con=0, shifts=(),
-                        self_weight=None, *, backend="xla-ref"):
+                        self_weight=None, *, W=None, backend="xla-ref"):
         return lambda z: z
 
     def signature(self, T_con: int) -> CommSignature:
@@ -326,9 +419,9 @@ class BeyondCentralCombine(GossipCombine):
         return super().make_sim_mixer(W, 1, backend=backend)
 
     def make_mesh_mixer(self, axis_name, L, T_con=1, shifts=(-1, 1),
-                        self_weight=None, *, backend="xla-ref"):
+                        self_weight=None, *, W=None, backend="xla-ref"):
         return super().make_mesh_mixer(axis_name, L, 1, shifts,
-                                       self_weight, backend=backend)
+                                       self_weight, W=W, backend=backend)
 
     def signature(self, T_con: int) -> CommSignature:
         return CommSignature("gossip", 1)

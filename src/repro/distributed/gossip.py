@@ -57,10 +57,12 @@ def roll_gossip(tree, T_con: int, shifts: Sequence[int] = (-1, 1),
         return tree
     rule = get_rule("gossip")
     sw, wn = ring_weights(shifts, self_weight)
+    weights = (sw,) + (wn,) * len(shifts)
 
     def one_round(t):
         return jax.tree.map(
-            lambda x: rule.roll_round(x, shifts, sw, wn, backend=backend), t)
+            lambda x: rule.roll_round(x, shifts, weights, backend=backend),
+            t)
 
     for _ in range(T_con):
         tree = one_round(tree)
@@ -71,17 +73,19 @@ def roll_gossip(tree, T_con: int, shifts: Sequence[int] = (-1, 1),
 
 def shard_map_gossip(Z, mesh, axis_name: str, T_con: int,
                      shifts: Sequence[int] = (-1, 1),
-                     self_weight: float | None = None, *,
+                     self_weight: float | None = None, *, W=None,
                      backend: str = "xla-ref"):
     """AGREE on hardware: Z's leading axis (length = mesh axis size) is
     sharded over ``axis_name``; every round each device exchanges its block
-    with its ring neighbours via collective-permute, then combines them
-    (one fused K+1-way dispatch per round on the pallas backends)."""
+    with its graph neighbours via collective-permute, then combines them
+    (one fused K+1-way dispatch per round on the pallas backends).
+    Pass ``W=`` (a concrete mixing matrix) to gossip over an arbitrary
+    weighted topology instead of the uniform circulant of ``shifts``."""
     L = mesh.shape[axis_name]
     if Z.shape[0] != L:
         raise ValueError(f"leading axis {Z.shape[0]} != mesh axis {L}")
     mixer = get_rule("gossip").make_mesh_mixer(
-        axis_name, L, T_con, shifts, self_weight, backend=backend)
+        axis_name, L, T_con, shifts, self_weight, W=W, backend=backend)
     spec = jax.sharding.PartitionSpec(axis_name)
 
     @functools.partial(_shard_map, mesh=mesh, in_specs=spec,

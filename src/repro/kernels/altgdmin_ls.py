@@ -59,7 +59,9 @@ def task_gram(X, U, y, *, blk_d: int = 256, interpret: bool = True):
     T, n, d = X.shape
     r = U.shape[1]
     blk_d = min(blk_d, d)
-    assert d % blk_d == 0
+    if d % blk_d:
+        raise ValueError(f"d={d} must be a multiple of blk_d={blk_d} "
+                         f"(ops.py pads)")
     grid = (T, d // blk_d)
 
     return pl.pallas_call(
@@ -128,7 +130,9 @@ def task_grad_tiles(X, U, B, y, *, blk_d: int = 256,
     T, n, d = X.shape
     r = U.shape[1]
     blk_d = min(blk_d, d)
-    assert d % blk_d == 0
+    if d % blk_d:
+        raise ValueError(f"d={d} must be a multiple of blk_d={blk_d} "
+                         f"(ops.py pads)")
     grid = (T, 2, d // blk_d)
 
     kernel = functools.partial(_grad_kernel, n=n)
@@ -231,7 +235,9 @@ def node_fused_iter(X, U, y, *, blk_d: int = 256, interpret: bool = True):
     L, tpn, n, d = X.shape
     r = U.shape[2]
     blk_d = min(blk_d, d)
-    assert d % blk_d == 0
+    if d % blk_d:
+        raise ValueError(f"d={d} must be a multiple of blk_d={blk_d} "
+                         f"(ops.py pads)")
     grid = (L * tpn, 2, d // blk_d)
 
     kernel = functools.partial(_fused_iter_kernel, r=r)
@@ -292,7 +298,9 @@ def node_task_gram(X, U, y, *, blk_d: int = 256, interpret: bool = True):
     L, tpn, n, d = X.shape
     r = U.shape[2]
     blk_d = min(blk_d, d)
-    assert d % blk_d == 0
+    if d % blk_d:
+        raise ValueError(f"d={d} must be a multiple of blk_d={blk_d} "
+                         f"(ops.py pads)")
     grid = (L * tpn, d // blk_d)
 
     return pl.pallas_call(
@@ -359,7 +367,9 @@ def node_task_grad_tiles(X, U, B, y, *, blk_d: int = 256,
     L, tpn, n, d = X.shape
     r = U.shape[2]
     blk_d = min(blk_d, d)
-    assert d % blk_d == 0
+    if d % blk_d:
+        raise ValueError(f"d={d} must be a multiple of blk_d={blk_d} "
+                         f"(ops.py pads)")
     grid = (L * tpn, 2, d // blk_d)
 
     return pl.pallas_call(

@@ -97,7 +97,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
     group = H // Hkv
     blk_q = min(blk_q, Sq)
     blk_k = min(blk_k, Skv)
-    assert Sq % blk_q == 0 and Skv % blk_k == 0
+    if Sq % blk_q or Skv % blk_k:
+        raise ValueError(f"Sq={Sq}/Skv={Skv} must be multiples of blk_q={blk_q}/"
+                         f"blk_k={blk_k} (ops.py pads)")
     scale = scale if scale is not None else D ** -0.5
     offset = Skv - Sq if offset is None else offset
     grid = (B, H, Sq // blk_q, Skv // blk_k)

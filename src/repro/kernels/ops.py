@@ -288,16 +288,20 @@ def _altgdmin_fused_step(X, U, y, *, blk_d, backend):
 
 # ------------------------------------------------------------ gossip
 
-def gossip_combine(z, neighbors, w_self, w_nbr, *, backend=None):
-    """Fused z ← w_self·z + w_nbr·Σ neighbors over arbitrary-shape z."""
-    return _gossip_combine(z, neighbors, w_self, w_nbr,
+def gossip_combine(z, neighbors, weights, *, backend=None):
+    """Fused z ← w₀·z + Σ_k w_{k+1}·neighbors[k] over arbitrary-shape z.
+    ``weights``: (K+1,) per-shift values — a uniform ring passes the same
+    neighbour weight K times; arbitrary weighted topologies pass their
+    own W-row slice.  ONE kernel dispatch either way."""
+    return _gossip_combine(z, neighbors,
+                           jnp.asarray(weights, jnp.float32),
                            backend=resolve_backend(backend))
 
 
-@functools.partial(jax.jit, static_argnames=("w_self", "w_nbr", "backend"))
-def _gossip_combine(z, neighbors, w_self, w_nbr, *, backend):
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _gossip_combine(z, neighbors, weights, *, backend):
     if backend == "xla-ref":
-        return _ref.ref_gossip_combine(z, neighbors, w_self, w_nbr)
+        return _ref.ref_gossip_combine(z, neighbors, weights)
     shape = z.shape
     flat = z.reshape(-1)
     n = flat.shape[0]
@@ -311,7 +315,7 @@ def _gossip_combine(z, neighbors, w_self, w_nbr, *, backend):
     M = flat.shape[0] // C
     out = _ga.gossip_combine(flat.reshape(M, C),
                              nbr.reshape(neighbors.shape[0], M, C),
-                             w_self, w_nbr, blk_rows=R,
+                             weights, blk_rows=R,
                              interpret=_interp(backend))
     return out.reshape(-1)[:n].reshape(shape)
 
@@ -319,7 +323,8 @@ def _gossip_combine(z, neighbors, w_self, w_nbr, *, backend):
 def mix_nodes(Z, W, *, blk_c=512, backend=None):
     """Consensus combine Z ← W Z over the leading node axis for a dense
     precomputed mixer (e.g. W^{T_con}): the whole AGREE phase in one
-    fused sweep.  Z: (L, ...); W: (L, L) → same shape as Z, f32."""
+    fused sweep.  Z: (L, ...); W: (L, L) → same shape AND dtype as Z
+    (accumulation is f32)."""
     return _mix_nodes(Z, W, blk_c=blk_c, backend=resolve_backend(backend))
 
 
@@ -329,7 +334,7 @@ def _mix_nodes(Z, W, *, blk_c, backend):
     flat = Z.reshape(L, -1)
     if backend == "xla-ref":
         out = W.astype(jnp.float32) @ flat.astype(jnp.float32)
-        return out.reshape(Z.shape)
+        return out.astype(Z.dtype).reshape(Z.shape)
     M = flat.shape[1]
     blk = min(blk_c, M)
     pad = (-M) % blk

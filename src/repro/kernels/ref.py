@@ -81,9 +81,12 @@ def ref_altgdmin_grad(X, U, B, y):
                       B.astype(jnp.float32))
 
 
-def ref_gossip_combine(z, neighbors, w_self, w_nbr):
-    """z ← w_self·z + w_nbr·Σ_k neighbors[k].  z: (..., ), neighbors:
-    (K, ...)."""
-    return (w_self * z.astype(jnp.float32)
-            + w_nbr * jnp.sum(neighbors.astype(jnp.float32), axis=0)
-            ).astype(z.dtype)
+def ref_gossip_combine(z, neighbors, weights):
+    """z ← w₀·z + Σ_k w_{k+1}·neighbors[k].  z: (...,), neighbors:
+    (K, ...), weights: (K+1,) — per-shift values (uniform rings pass the
+    same value K times)."""
+    w = jnp.asarray(weights, jnp.float32)
+    acc = w[0] * z.astype(jnp.float32)
+    for k in range(neighbors.shape[0]):
+        acc = acc + w[k + 1] * neighbors[k].astype(jnp.float32)
+    return acc.astype(z.dtype)

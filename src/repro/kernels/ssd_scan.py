@@ -77,7 +77,9 @@ def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
     B, H, S, P = x.shape
     N = Bm.shape[-1]
     chunk = min(chunk, S)
-    assert S % chunk == 0
+    if S % chunk:
+        raise ValueError(f"S={S} must be a multiple of chunk={chunk} "
+                         f"(ops.py pads)")
     nc = S // chunk
     grid = (B, H, nc)
 

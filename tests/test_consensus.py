@@ -32,10 +32,27 @@ def test_combine_blocks_matches_ref_and_fused():
     z = jax.random.normal(k, (16, 8), jnp.float32)
     nbrs = [jax.random.normal(jax.random.fold_in(k, i), (16, 8), jnp.float32)
             for i in range(3)]
-    sw, wn = 0.25, 0.25
-    want = ref.ref_gossip_combine(z, jnp.stack(nbrs), sw, wn)
-    unfused = combine_blocks(z, nbrs, sw, wn, backend="xla-ref")
-    fused = combine_blocks(z, nbrs, sw, wn, backend="pallas-interpret")
+    weights = (0.25, 0.25, 0.25, 0.25)
+    want = ref.ref_gossip_combine(z, jnp.stack(nbrs), weights)
+    unfused = combine_blocks(z, nbrs, weights, backend="xla-ref")
+    fused = combine_blocks(z, nbrs, weights, backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_combine_blocks_per_shift_weights():
+    """The generalized primitive: a non-uniform weight vector (a W row)
+    combines every neighbour with its own weight on both paths."""
+    k = jax.random.PRNGKey(7)
+    z = jax.random.normal(k, (12, 4), jnp.float32)
+    nbrs = [jax.random.normal(jax.random.fold_in(k, i), (12, 4), jnp.float32)
+            for i in range(3)]
+    weights = jnp.asarray([0.4, 0.3, 0.2, 0.1], jnp.float32)
+    want = ref.ref_gossip_combine(z, jnp.stack(nbrs), weights)
+    unfused = combine_blocks(z, nbrs, weights, backend="xla-ref")
+    fused = combine_blocks(z, nbrs, weights, backend="pallas-interpret")
     np.testing.assert_allclose(np.asarray(unfused), np.asarray(want),
                                rtol=1e-6, atol=1e-7)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
@@ -49,9 +66,48 @@ def test_combine_blocks_f64_stays_exact():
     nbrs = [jnp.roll(z, s, axis=0) for s in (-1, 1)]
     sw, wn = 1 / 3, 1 / 3
     exact = sw * z + wn * nbrs[0] + wn * nbrs[1]
-    out = combine_blocks(z, nbrs, sw, wn, backend="pallas-interpret")
+    out = combine_blocks(z, nbrs, (sw, wn, wn), backend="pallas-interpret")
     assert out.dtype == jnp.float64
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exact))
+
+
+# ------------------------------------------- mesh weight decomposition
+
+def test_mesh_weights_from_matrix_circulant_collapses_uniform():
+    """A circulant W decomposes to the historical signed shifts with one
+    shared weight row (the scalar fast path — no per-device gather)."""
+    from repro.distributed import mesh_weights_from_matrix
+    W = circulant_weights(8, (-1, 1))
+    shifts, table = mesh_weights_from_matrix(W)
+    assert shifts == (-1, 1)
+    np.testing.assert_array_equal(table, np.broadcast_to(table[0],
+                                                         table.shape))
+    np.testing.assert_allclose(table[0], [1 / 3, 1 / 3, 1 / 3], rtol=1e-12)
+
+
+def test_mesh_weights_from_matrix_reconstructs_any_W():
+    """Every entry of an irregular Metropolis W lands on exactly one
+    cyclic shift: reassembling the table reproduces W exactly."""
+    from repro.distributed import erdos_renyi, mesh_weights_from_matrix
+    g = erdos_renyi(8, 0.4, seed=3)
+    W = metropolis_weights(g)
+    shifts, table = mesh_weights_from_matrix(W)
+    L = W.shape[0]
+    idx = np.arange(L)
+    rebuilt = np.zeros_like(W)
+    rebuilt[idx, idx] = table[:, 0]
+    for k, s in enumerate(shifts):
+        rebuilt[idx, (idx + s) % L] += table[:, k + 1]
+    np.testing.assert_array_equal(rebuilt, W)
+    # signed representatives, sorted
+    assert all(-L // 2 < s <= L // 2 for s in shifts)
+    assert list(shifts) == sorted(shifts)
+
+
+def test_mesh_weights_from_matrix_rejects_nonsquare():
+    from repro.distributed import mesh_weights_from_matrix
+    with pytest.raises(ValueError, match="square"):
+        mesh_weights_from_matrix(np.ones((3, 4)))
 
 
 # ------------------------------------------------- simulator lowerings

@@ -189,7 +189,63 @@ def test_gossip_combine_matches_ref(n, k):
     nbrs = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
     w_self = 1.0 / (k + 1)
     w_nbr = (1.0 - w_self) / k
-    out = ops.gossip_combine(z, nbrs, w_self, w_nbr)
-    want = ref.ref_gossip_combine(z, nbrs, w_self, w_nbr)
+    weights = (w_self,) + (w_nbr,) * k
+    out = ops.gossip_combine(z, nbrs, weights)
+    want = ref.ref_gossip_combine(z, nbrs, weights)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6,
                                atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=3, max_value=2000),
+       k=st.integers(min_value=1, max_value=5))
+def test_gossip_combine_per_shift_weights(n, k):
+    """Non-uniform per-shift weights (an irregular-graph W row) through
+    the fused kernel match the weighted reference."""
+    key = jax.random.PRNGKey(n + 7)
+    z = jax.random.normal(key, (n,), jnp.float32)
+    nbrs = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
+    weights = jax.nn.softmax(jax.random.normal(
+        jax.random.fold_in(key, 2), (k + 1,)))
+    out = ops.gossip_combine(z, nbrs, weights)
+    want = ref.ref_gossip_combine(z, nbrs, weights)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_gossip_combine_kernel_odd_rows():
+    """Regression (PR 4): the raw kernel pads row counts not divisible
+    by blk_rows instead of tripping a bare assert — M=300 with the
+    default blk_rows=256 crashed before."""
+    from repro.kernels import gossip_axpy
+    key = jax.random.PRNGKey(3)
+    z = jax.random.normal(key, (300, 8), jnp.float32)
+    nbrs = jax.random.normal(jax.random.fold_in(key, 1), (2, 300, 8),
+                             jnp.float32)
+    weights = jnp.asarray([0.5, 0.3, 0.2], jnp.float32)
+    out = gossip_axpy.gossip_combine(z, nbrs, weights, interpret=True)
+    want = ref.ref_gossip_combine(z, nbrs, weights)
+    assert out.shape == z.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mix_rows_preserves_dtype():
+    """Regression (PR 4): mix_rows' out_shape followed a hard-coded f32,
+    silently upcasting bf16 operands in the hoisted AGREE path; the
+    output dtype must follow Z."""
+    key = jax.random.PRNGKey(5)
+    W = jax.nn.softmax(jax.random.normal(key, (4, 4)), axis=1)
+    for dtype in (jnp.bfloat16, jnp.float32):
+        Z = jax.random.normal(jax.random.fold_in(key, 1),
+                              (4, 37, 3)).astype(dtype)
+        out = ops.mix_nodes(Z, W.astype(jnp.float32),
+                            backend="pallas-interpret")
+        assert out.dtype == dtype, (dtype, out.dtype)
+        assert out.shape == Z.shape
+        want = jnp.einsum("gh,h...->g...", W.astype(jnp.float32),
+                          Z.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want.astype(dtype), np.float32),
+                                   rtol=1e-2 if dtype == jnp.bfloat16
+                                   else 1e-6, atol=1e-2)
