@@ -219,3 +219,88 @@ def bench_kernels():
                  "us_per_call": round(_time(h, X, U, y), 1),
                  "kernel_matches_ref": agree})
     return rows
+
+
+# ------------------------------------------------- compressed combine
+
+# The acceptance shape of the compressed rules: the paper's d×r iterate
+# at (d=100, r=4, L=16) on the degree-2 ring.
+COMPRESSION_SHAPE = dict(shape="paper_d100", d=100, r=4, L=16, K=2)
+
+
+def bench_compression(quick: bool = False, t_con: int = 3):
+    """Wire volume + µs/round of the compressed consensus rules vs dense
+    gossip: per variant the declared CommSignature payload
+    (entries/round, bytes/iter at the paper's f64 network model and the
+    reduction factor vs dense) and the measured time of one simulator
+    round — the fused lowering (pallas-interpret: mix_rows on the
+    refreshed copies + compress/dequant kernels) vs the exact xla-ref
+    chain.  Interpret-mode timings are CPU validations, not TPU
+    projections; the bytes columns are the trajectory metric.  The
+    event rule also reports its measured send fraction on a
+    near-consensus iterate (the static signature prices the θ=0 worst
+    case).
+
+    ``reduction_vs_dense`` is the full wire-format factor (the dense
+    baseline ships f64 under the paper's model); ``entries_reduction``
+    isolates the pure entry-count factor so the sparsification and the
+    lower-precision-wire contributions are not conflated (top-k at
+    k=d/4: 6.4× = 3.2× fewer entries × 2× f32 wire)."""
+    import numpy as np
+
+    from repro.distributed.consensus import CommSignature, get_rule
+
+    cfg = COMPRESSION_SHAPE
+    d, r, L, K = cfg["d"], cfg["r"], cfg["L"], cfg["K"]
+    key = jax.random.PRNGKey(0)
+    Z = jax.random.normal(key, (L, d, r), jnp.float32)
+    W = jnp.asarray(np.eye(L) / 3
+                    + np.roll(np.eye(L), 1, 1) / 3
+                    + np.roll(np.eye(L), -1, 1) / 3, jnp.float32)
+    dense_bytes = CommSignature("gossip", t_con).bytes_per_iter(
+        d * r, 8, L, K)
+
+    variants = [
+        ("dense_gossip", "gossip", {}),
+        ("topk_quarter_d", "topk_gossip", {"compression_k": d // 4}),
+        ("quantized_bf16", "quantized_gossip", {}),
+        ("quantized_int8", "quantized_gossip", {"compression": "int8"}),
+        ("event_theta_0.05", "event_gossip", {"event_threshold": 0.05}),
+    ]
+    rows = []
+    for variant, rule_name, kw in variants:
+        rule = get_rule(rule_name)
+        sig = rule.signature(t_con, d=d, r=r, **kw)
+        bytes_iter = sig.bytes_per_iter(d * r, 8, L, K)
+
+        def timed_round(backend):
+            if rule_name == "gossip":
+                mixer = rule.make_sim_mixer(W, t_con, backend=backend)
+                fn = jax.jit(mixer)
+                return _time(fn, Z, reps=3 if quick else 10) / t_con
+            mixer = rule.make_sim_state_mixer(W, t_con, backend=backend,
+                                              **kw)
+            state = rule.init_state(Z, **kw)
+            fn = jax.jit(lambda z, s: mixer(z, s)[0])
+            return _time(fn, Z, state, reps=3 if quick else 10) / t_con
+
+        entries = (sig.entries_per_round
+                   if sig.entries_per_round is not None else d * r)
+        row = dict(cfg, variant=variant, t_con=t_con,
+                   entries_per_round=entries,
+                   bytes_per_iter=bytes_iter,
+                   reduction_vs_dense=round(dense_bytes / bytes_iter, 2),
+                   entries_reduction=round(d * r / entries, 2),
+                   us_per_round_fused=round(
+                       timed_round("pallas-interpret"), 1),
+                   us_per_round_ref=round(timed_round("xla-ref"), 1))
+        if rule_name == "event_gossip":
+            # measured trigger rate: cold copies always send; a
+            # near-consensus iterate with warm copies almost never does
+            rule_ev = get_rule("event_gossip")
+            row["send_frac_cold"] = float(rule_ev.send_fraction(
+                Z, jnp.zeros_like(Z), kw["event_threshold"]))
+            row["send_frac_warm"] = float(rule_ev.send_fraction(
+                Z, Z * (1 + 1e-4), kw["event_threshold"]))
+        rows.append(row)
+    return rows

@@ -48,6 +48,7 @@ def main() -> None:
     from benchmarks.complexity import (bench_complexity_table,
                                        bench_trainer_comm)
     from benchmarks.kernel_bench import (bench_altgdmin_engine,
+                                         bench_compression,
                                          bench_consensus, bench_kernels)
 
     t0 = time.time()
@@ -55,6 +56,8 @@ def main() -> None:
     emit("altgdmin_engine", engine_rows, args.out)
     consensus_rows = bench_consensus(quick=args.quick)
     emit("consensus_combine", consensus_rows, args.out)
+    compression_rows = bench_compression(quick=args.quick)
+    emit("compression_combine", compression_rows, args.out)
     bench_json = {
         "benchmark": "altgdmin_engine",
         "description": "fused node-batched AltGDmin iteration engine: "
@@ -72,6 +75,17 @@ def main() -> None:
                            "to) vs the unfused K-sweep weighted-sum "
                            "chain",
             "rows": consensus_rows,
+        },
+        "compression": {
+            "description": "compressed consensus rules (topk/quantized/"
+                           "event gossip with reference-copy error "
+                           "feedback) vs dense gossip at the paper's "
+                           "(d=100, r=4, L=16) shape: declared "
+                           "CommSignature bytes/iter + reduction factor "
+                           "and µs/round of the fused vs exact "
+                           "simulator lowering; the event rule also "
+                           "reports its measured send fraction",
+            "rows": compression_rows,
         },
     }
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

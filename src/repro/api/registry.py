@@ -55,9 +55,13 @@ class SolverDef:
         """Legacy alias: the combine rule's pricing pattern."""
         return self.signature(1).pattern
 
-    def signature(self, T_con: int) -> CommSignature:
-        """The solver's per-iteration communication signature."""
-        return get_rule(self.combine).signature(T_con)
+    def signature(self, T_con: int, **params) -> CommSignature:
+        """The solver's per-iteration communication signature.
+        ``params`` optionally carries the payload context (problem dims
+        ``d``/``r`` + the SolverSpec compression knobs) so compressed
+        rules can report their actual wire format; base rules ignore
+        it."""
+        return get_rule(self.combine).signature(T_con, **params)
 
     def call(self, U0_nodes, Xg, yg, W, adj, *, eta: float, T_GD: int,
              T_con: int, U_star=None, engine=None,
@@ -131,3 +135,24 @@ register_solver(SolverDef(
     topology="W", combine="beyond_central",
     mesh_fn=_runtime.beyond_central_mesh,
     spec_kwargs=("local_steps",)))
+
+# compressed-wire variants (stateful rules — error feedback / last-sent
+# state rides the drivers' scan carries); their signatures report the
+# compressed entries/bytes so the wall-clock axis prices the real payload
+register_solver(SolverDef(
+    name="dif_topk", fn=_alg.dif_topk_altgdmin,
+    topology="W", combine="topk_gossip",
+    mesh_fn=_runtime.dif_topk_mesh,
+    spec_kwargs=("compression_k",)))
+
+register_solver(SolverDef(
+    name="dif_quantized", fn=_alg.dif_quantized_altgdmin,
+    topology="W", combine="quantized_gossip",
+    mesh_fn=_runtime.dif_quantized_mesh,
+    spec_kwargs=("compression",)))
+
+register_solver(SolverDef(
+    name="dif_event", fn=_alg.dif_event_altgdmin,
+    topology="W", combine="event_gossip",
+    mesh_fn=_runtime.dif_event_mesh,
+    spec_kwargs=("event_threshold",)))

@@ -139,8 +139,14 @@ def comm_time_axis(spec: ExperimentSpec, solver: SolverDef,
     compute = c.compute_s_per_iter
     if "local_steps" in solver.spec_kwargs:
         compute *= spec.solver.local_steps
+    # payload context: compressed rules fill entries_per_round /
+    # bytes_per_entry from these, base rules ignore them
+    sig = solver.signature(spec.solver.T_con, d=p.d, r=p.r,
+                           compression=spec.solver.compression,
+                           compression_k=spec.solver.compression_k,
+                           event_threshold=spec.solver.event_threshold)
     return _cm.time_axis_from_signature(
-        solver.signature(spec.solver.T_con), spec.solver.T_GD, p.d, p.r,
+        sig, spec.solver.T_GD, p.d, p.r,
         p.L, graph.max_degree, compute,
         model=_COMM_MODELS[c.model], seed=c.seed)
 
@@ -164,13 +170,17 @@ def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
     from repro.core.engine import resolve_engine
     solver = get_solver(spec.solver.name)
     # spec-only validation runs BEFORE the expensive materialization so
-    # an invalid sweep cell fails without paying the setup liturgy
-    if (spec.solver.local_steps != 1
-            and "local_steps" not in solver.spec_kwargs):
-        raise ValueError(
-            f"solver {solver.name!r} does not consume local_steps "
-            f"(got local_steps={spec.solver.local_steps}); only solvers "
-            f"declaring it in spec_kwargs honor the field")
+    # an invalid sweep cell fails without paying the setup liturgy: a
+    # non-default solver knob on a solver that ignores it must raise
+    # instead of silently running without it
+    for field, default in (("local_steps", 1), ("compression", None),
+                           ("compression_k", 0), ("event_threshold", 0.0)):
+        value = getattr(spec.solver, field)
+        if value != default and field not in solver.spec_kwargs:
+            raise ValueError(
+                f"solver {solver.name!r} does not consume {field} "
+                f"(got {field}={value}); only solvers declaring it in "
+                f"spec_kwargs honor the field")
     mat = materialize(spec, key) if materialized is None else materialized
     eta = _resolve_spec_eta(spec, mat.init)
     eng = resolve_engine(engine, spec.engine.backend,

@@ -155,8 +155,18 @@ class SolverSpec:
 
     ``eta=None`` resolves via Theorem 1's η = c_η/(n σ*max²), estimating
     σ*max from the spectral init's R diagonal (the paper's recipe).
-    ``local_steps`` is consumed only by solvers that declare it
-    (``beyond_central``: local adapt steps per single gossip round).
+    The tail fields are consumed only by solvers that declare them in
+    their registry ``spec_kwargs`` (a non-default value on any other
+    solver is rejected at run time):
+
+      * ``local_steps``      — ``beyond_central``: local adapt steps per
+        single gossip round;
+      * ``compression``      — ``dif_quantized``: wire format, one of
+        ``"bf16"`` (None → default) / ``"int8"`` / ``"int8_stochastic"``;
+      * ``compression_k``    — ``dif_topk``: rows kept per gossip round
+        (0 → d/4);
+      * ``event_threshold``  — ``dif_event``: relative-change trigger θ
+        (0 → always send, i.e. dense gossip).
     """
     name: str = "dif_altgdmin"
     T_GD: int = 250
@@ -164,11 +174,20 @@ class SolverSpec:
     eta: Optional[float] = None
     c_eta: float = 0.4
     local_steps: int = 1
+    compression: Optional[str] = None
+    compression_k: int = 0
+    event_threshold: float = 0.0
 
     def __post_init__(self):
         if self.local_steps < 1:
             raise ValueError(f"local_steps must be >= 1, got "
                              f"{self.local_steps}")
+        if self.compression_k < 0:
+            raise ValueError(f"compression_k must be >= 0 (0 = the rule's "
+                             f"d/4 default), got {self.compression_k}")
+        if self.event_threshold < 0:
+            raise ValueError(f"event_threshold must be >= 0, got "
+                             f"{self.event_threshold}")
 
 
 @dataclasses.dataclass(frozen=True)

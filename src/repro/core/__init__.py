@@ -11,6 +11,7 @@ from repro.core.spectral import decentralized_spectral_init, SpectralInit
 from repro.core.altgdmin import (
     dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
     exact_diffusion_altgdmin, beyond_central_altgdmin,
+    dif_topk_altgdmin, dif_quantized_altgdmin, dif_event_altgdmin,
     minimize_B, grad_U, RunResult, resolve_eta,
 )
 from repro.core.engine import AltgdminEngine, resolve_engine
@@ -19,4 +20,5 @@ from repro.core import comm_model
 from repro.core.runtime import (
     dif_altgdmin_mesh, dec_altgdmin_mesh, dgd_altgdmin_mesh,
     centralized_altgdmin_mesh, exact_diffusion_mesh, beyond_central_mesh,
+    dif_topk_mesh, dif_quantized_mesh, dif_event_mesh,
 )

@@ -19,16 +19,28 @@ consensus layer (:mod:`repro.distributed.consensus`):
   * ``beyond_central_altgdmin``  — the communication-efficient variant of
     Beyond Centralization (arXiv:2512.22675): several local adapt steps
     per outer iteration, then ONE gossip round (a single d×r exchange
-    per iteration instead of the T_con-round chain).
+    per iteration instead of the T_con-round chain);
+
+and the compressed-communication variants on the consensus layer's
+stateful wire rules (top-k sparsified / quantized / event-triggered
+gossip with error feedback riding the scan carry):
+
+  * ``dif_topk_altgdmin``      — ``topk_gossip`` (k rows per round);
+  * ``dif_quantized_altgdmin`` — ``quantized_gossip`` (bf16/int8 wire);
+  * ``dif_event_altgdmin``     — ``event_gossip`` (threshold-triggered).
 
 Simulator layout: node axis leading. U_nodes: (L, d, r); per-node data
 Xg: (L, tpn, n, d), yg: (L, tpn, n).  All loops are lax.scan so tracing
 stays cheap for T_GD in the hundreds.
 
-Sample splitting: if Xg/yg carry a leading fold axis (F, L, ...), iteration
-τ uses fold (2τ-1 mod F) for the min step and fold (2τ mod F) for the
-gradient step, mirroring Algorithm 3's disjoint-set schedule; otherwise the
-same data is reused every iteration (as in the paper's simulations).
+Sample splitting: if Xg/yg carry a leading fold axis (F, L, ...), the
+0-based iteration τ = 0, 1, … uses fold (2τ mod F) for the min step and
+fold (2τ+1 mod F) for the gradient step, mirroring Algorithm 3's
+disjoint-set schedule (consecutive fresh folds per iteration, wrapping
+modulo F); the final B refit reuses the LAST min fold, 2·(T_GD−1) mod F,
+so B is fit on the same data that produced the final U.  Without a fold
+axis the same data is reused every iteration (as in the paper's
+simulations) and the refit fold index is irrelevant.
 
 Execution: every driver routes its min-B/gradient/combine phases through
 an :class:`repro.core.engine.AltgdminEngine` (``engine=`` or ``backend=``
@@ -49,7 +61,7 @@ from repro.core.engine import (AltgdminEngine, ref_grad_U, ref_minimize_B,
                                resolve_engine)
 from repro.core.metrics import subspace_distance, consensus_spread
 from repro.core.spectral import _qr_pos
-from repro.distributed.consensus import (ExactDiffusionCombine,
+from repro.distributed.consensus import (ExactDiffusionCombine, get_rule,
                                          neighbor_average_matrix)
 
 
@@ -132,7 +144,7 @@ def dif_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int, T_con: int,
 
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0_nodes, jnp.arange(T_GD))
-    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 2 * (T_GD - 1)))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
 
 
@@ -158,7 +170,7 @@ def dec_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int, T_con: int,
 
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0_nodes, jnp.arange(T_GD))
-    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 2 * (T_GD - 1)))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
 
 
@@ -221,7 +233,7 @@ def exact_diffusion_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
 
     (U_fin, _), (sd_max, sd_mean, spread) = jax.lax.scan(
         step, (U0_nodes, U0_nodes), jnp.arange(T_GD))
-    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 2 * (T_GD - 1)))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
 
 
@@ -254,7 +266,9 @@ def beyond_central_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
 
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0_nodes, jnp.arange(T_GD))
-    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
+    # the last LOCAL min fold: iteration T_GD−1's final adapt step
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg,
+                                           2 * (T_GD * local_steps - 1)))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
 
 
@@ -281,5 +295,93 @@ def dgd_altgdmin(U0_nodes, Xg, yg, adj, *, eta: float, T_GD: int,
 
     U_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
         step, U0_nodes, jnp.arange(T_GD))
-    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 0))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 2 * (T_GD - 1)))
     return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
+
+
+# ----------------------------------------------------------------------
+# compressed-communication variants (stateful consensus rules)
+# ----------------------------------------------------------------------
+
+def _compressed_dif(U0_nodes, Xg, yg, W, *, rule_name: str, eta: float,
+                    T_GD: int, T_con: int, U_star, engine, backend,
+                    **rule_kw) -> RunResult:
+    """Dif-AltGDmin (adapt-then-combine) with a STATEFUL compressed
+    combine rule: the rule's per-node compression state (error-feedback
+    residual / last-sent iterate) rides the lax.scan carry next to U and
+    is updated by every gossip round, so compression error is fed back
+    instead of discarded."""
+    L = U0_nodes.shape[0]
+    U_star_ = U_star if U_star is not None else U0_nodes[0]
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4
+    rule = get_rule(rule_name)
+    mix = eng.make_state_mixer(W, T_con, rule=rule_name, **rule_kw)
+    state0 = rule.init_state(U0_nodes, **rule_kw)
+
+    def step(carry, tau):
+        U, cstate = carry
+        Xb, yb = _select(Xg, yg, 2 * tau)
+        Xc, yc = _select(Xg, yg, 2 * tau + 1)
+        B, G = eng.min_grad(U, Xb, yb, Xc, yc, same_data=same_data)
+        U_breve = U - (eta * L) * G              # local adapt
+        U_tilde, cstate = mix(U_breve, cstate)   # compressed diffusion
+        U_new, _ = _qr_pos(U_tilde)              # projection
+        return (U_new, cstate), _metrics(U_new, U_star_)
+
+    (U_fin, _), (sd_max, sd_mean, spread) = jax.lax.scan(
+        step, (U0_nodes, state0), jnp.arange(T_GD))
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 2 * (T_GD - 1)))
+    return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
+
+
+def dif_topk_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                      T_con: int, compression_k: int = 0, U_star=None,
+                      engine: Optional[AltgdminEngine] = None,
+                      backend: Optional[str] = None) -> RunResult:
+    """Dif-AltGDmin over the ``topk_gossip`` rule: each gossip round
+    exchanges only the ``compression_k`` largest-norm rows of the
+    error-compensated iterate (0 → d/4), with the compression error fed
+    back next round.  ``compression_k = d`` recovers ``dif_altgdmin``
+    bit-identically on the exact (xla-ref / f64) path; fused backends
+    agree to f32 round-off only, since dense gossip hoists the whole
+    AGREE phase into one precomputed W^{T_con} combine while the
+    compressed rule must mix round by round."""
+    return _compressed_dif(U0_nodes, Xg, yg, W, rule_name="topk_gossip",
+                           eta=eta, T_GD=T_GD, T_con=T_con, U_star=U_star,
+                           engine=engine, backend=backend,
+                           compression_k=compression_k)
+
+
+def dif_quantized_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                           T_con: int, compression: Optional[str] = None,
+                           U_star=None,
+                           engine: Optional[AltgdminEngine] = None,
+                           backend: Optional[str] = None) -> RunResult:
+    """Dif-AltGDmin over the ``quantized_gossip`` rule: the wire carries
+    a low-precision cast of the error-compensated iterate —
+    ``compression`` picks ``"bf16"`` (default), ``"int8"``, or
+    ``"int8_stochastic"`` — while the combine accumulates in f32 (f64 on
+    the exact x64 path)."""
+    return _compressed_dif(U0_nodes, Xg, yg, W,
+                           rule_name="quantized_gossip", eta=eta,
+                           T_GD=T_GD, T_con=T_con, U_star=U_star,
+                           engine=engine, backend=backend,
+                           compression=compression)
+
+
+def dif_event_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                       T_con: int, event_threshold: float = 0.0,
+                       U_star=None,
+                       engine: Optional[AltgdminEngine] = None,
+                       backend: Optional[str] = None) -> RunResult:
+    """Dif-AltGDmin over the ``event_gossip`` rule: a node re-broadcasts
+    its iterate only when ‖U_g − U_g^last-sent‖_F > θ·‖U_g‖_F
+    (θ = ``event_threshold``); neighbours combine with the stale
+    last-sent value otherwise.  θ = 0 recovers ``dif_altgdmin``
+    bit-identically on the exact (xla-ref / f64) path (fused backends:
+    f32 round-off vs the hoisted W^{T_con} dense combine)."""
+    return _compressed_dif(U0_nodes, Xg, yg, W, rule_name="event_gossip",
+                           eta=eta, T_GD=T_GD, T_con=T_con, U_star=U_star,
+                           engine=engine, backend=backend,
+                           event_threshold=event_threshold)

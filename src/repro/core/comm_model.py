@@ -23,9 +23,13 @@ class NetworkModel:
     bytes_per_entry: int = 8             # double precision
 
     def message_time(self, n_entries: int, rng: np.random.Generator | None
-                     = None) -> float:
-        """t_comm for one message of ``n_entries`` scalars (paper Sec. V)."""
-        t = self.latency_s + self.bytes_per_entry * n_entries / self.bandwidth_bytes
+                     = None, bytes_per_entry: int | None = None) -> float:
+        """t_comm for one message of ``n_entries`` scalars (paper Sec. V).
+        ``bytes_per_entry`` overrides the model's native wire precision
+        for compressed payloads (a CommSignature's f32/bf16/int8 wire)."""
+        bpe = self.bytes_per_entry if bytes_per_entry is None \
+            else bytes_per_entry
+        t = self.latency_s + bpe * n_entries / self.bandwidth_bytes
         if rng is not None and self.jitter_std_s > 0:
             t += float(abs(rng.normal(0.0, self.jitter_std_s)))
         return t
@@ -38,23 +42,31 @@ TPU_ICI = NetworkModel(bandwidth_bytes=50e9, latency_s=1e-6,
 
 def agree_round_time(d: int, r: int, max_deg: int, model: NetworkModel,
                      rng: np.random.Generator | None = None,
-                     parallel: bool = True) -> float:
-    """Wall-clock of ONE gossip round exchanging a d×r matrix with every
-    neighbour.  With parallel send/receive (the paper's assumption) only the
-    slowest concurrent message counts; otherwise they serialize."""
-    times = [model.message_time(d * r, rng) for _ in range(max_deg)]
+                     parallel: bool = True, *, n_entries: int | None = None,
+                     bytes_per_entry: int | None = None) -> float:
+    """Wall-clock of ONE gossip round exchanging a message with every
+    neighbour — a dense d×r matrix unless ``n_entries`` /
+    ``bytes_per_entry`` describe a compressed payload.  With parallel
+    send/receive (the paper's assumption) only the slowest concurrent
+    message counts; otherwise they serialize."""
+    n = d * r if n_entries is None else n_entries
+    times = [model.message_time(n, rng, bytes_per_entry=bytes_per_entry)
+             for _ in range(max_deg)]
     return max(times) if parallel else sum(times)
 
 
 def decentralized_time_axis(n_iters: int, T_con: int, d: int, r: int,
                             max_deg: int, compute_time_per_iter: float,
                             model: NetworkModel = ETHERNET_1GBPS,
-                            seed: int = 0) -> np.ndarray:
+                            seed: int = 0, *, n_entries: int | None = None,
+                            bytes_per_entry: int | None = None) -> np.ndarray:
     """Cumulative wall-clock after each outer iteration for a decentralized
     run: per iteration, T_con gossip rounds + local compute."""
     rng = np.random.default_rng(seed)
     per_iter = np.array([
-        sum(agree_round_time(d, r, max_deg, model, rng) for _ in range(T_con))
+        sum(agree_round_time(d, r, max_deg, model, rng, n_entries=n_entries,
+                             bytes_per_entry=bytes_per_entry)
+            for _ in range(T_con))
         + compute_time_per_iter
         for _ in range(n_iters)])
     return np.cumsum(per_iter)
@@ -68,15 +80,20 @@ def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
     :class:`~repro.distributed.consensus.CommSignature`: ``"central"``
     is a gather + broadcast per iteration, ``"none"`` is compute only,
     and the decentralized patterns cost ``rounds_per_iter`` gossip
-    rounds of a d×r exchange with every neighbour."""
+    rounds with every neighbour.  The signature's payload fields
+    (``entries_per_round``/``bytes_per_entry``) override the dense d×r
+    exchange at the model's native precision, so compressed combine
+    rules price their actual wire format."""
     if sig.pattern == "central":
         return centralized_time_axis(n_iters, d, r, L, compute_s_per_iter,
                                      model=model, seed=seed)
     if sig.pattern == "none" or sig.rounds_per_iter == 0:
         return np.cumsum(np.full(n_iters, compute_s_per_iter))
-    return decentralized_time_axis(n_iters, sig.rounds_per_iter, d, r,
-                                   max_deg, compute_s_per_iter,
-                                   model=model, seed=seed)
+    return decentralized_time_axis(
+        n_iters, sig.rounds_per_iter, d, r, max_deg, compute_s_per_iter,
+        model=model, seed=seed,
+        n_entries=getattr(sig, "entries_per_round", None),
+        bytes_per_entry=getattr(sig, "bytes_per_entry", None))
 
 
 def centralized_time_axis(n_iters: int, d: int, r: int, L: int,

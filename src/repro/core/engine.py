@@ -147,6 +147,15 @@ class AltgdminEngine:
         no self weight — M comes in precomputed)."""
         return get_rule("neighbor").make_sim_mixer(M, backend=self.backend)
 
+    def make_state_mixer(self, W, T_con: int, *, rule: str, **rule_kw):
+        """Stateful combine for the compressed/event-triggered rules:
+        ``(Z, state) ↦ (Z', state')``.  ``rule_kw`` carries the rule's
+        spec knobs (``compression_k``, ``compression``,
+        ``event_threshold``); the state itself comes from the rule's
+        ``init_state`` and rides the driver's scan carry."""
+        return get_rule(rule).make_sim_state_mixer(
+            W, T_con, backend=self.backend, **rule_kw)
+
 
 def resolve_engine(engine=None, backend: str | None = None,
                    blk_d: int = 256) -> AltgdminEngine:

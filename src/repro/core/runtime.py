@@ -30,7 +30,15 @@ All six registered solvers share one shard_map skeleton
   * :func:`exact_diffusion_mesh` — bias-corrected combine
     (arXiv:2304.07358; the ψ correction state rides the scan carry);
   * :func:`beyond_central_mesh` — ``local_steps`` local adapt steps then
-    ONE gossip round (arXiv:2512.22675).
+    ONE gossip round (arXiv:2512.22675);
+  * :func:`dif_topk_mesh` / :func:`dif_quantized_mesh` /
+    :func:`dif_event_mesh` — the compressed-wire variants: per gossip
+    round each device encodes its error-compensated iterate (top-k rows
+    / bf16-int8 quantization / event-triggered hold), the COMPACT
+    payload crosses the wire by collective-permute, and the K+1
+    decompressed blocks still merge in ONE fused ``gossip_combine``
+    dispatch; the compression state (error-feedback residual /
+    last-sent iterate) rides the aux scan carry.
 
 The min-B and gradient phases route through the same
 :class:`repro.core.engine.AltgdminEngine` as the simulator (``engine=``/
@@ -327,3 +335,98 @@ def beyond_central_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
     return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
                           make_update=make_update, engine=engine,
                           backend=backend, U_star=U_star)
+
+
+# ----------------------------------------------------------------------
+# compressed-wire variants (stateful consensus rules)
+# ----------------------------------------------------------------------
+
+def _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name: str, *,
+                         rule_name: str, eta: float, T_GD: int, T_con: int,
+                         shifts=(-1, 1), self_weight=None, W=None,
+                         engine: AltgdminEngine | None = None,
+                         backend: str | None = None, U_star=None,
+                         **rule_kw):
+    """Adapt-then-combine over a STATEFUL compressed combine rule: the
+    rule's per-device compression state (error-feedback residual /
+    last-sent iterate, kept node-batched with N = 1 so the encode is
+    substrate-independent) rides the shared skeleton's aux scan carry.
+    Per gossip round only the rule's compact payload crosses the wire;
+    the K+1 decompressed blocks merge in ONE fused ``gossip_combine``
+    dispatch on the pallas backends."""
+    L = mesh.shape[axis_name]
+    eta_L = eta * L
+    rule = get_rule(rule_name)
+
+    def make_update(eng):
+        mix = rule.make_mesh_state_mixer(
+            axis_name, L, T_con, shifts, self_weight, W=W,
+            backend=eng.backend, **rule_kw)
+
+        def update(U, cstate, mg):
+            _, G = mg(U)
+            U_breve = U - eta_L * G                  # local adapt
+            U_tilde, cstate = mix(U_breve, cstate)   # compressed diffusion
+            return _qr_pos(U_tilde)[0], cstate       # projection
+        return update
+
+    # one neighbour-copy buffer per distinct cyclic shift of the topology
+    n_shifts = len(rule._mesh_weights(L, shifts, self_weight, W)[0])
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star,
+                          init_aux=lambda U: rule.init_mesh_state(
+                              U, n_shifts, **rule_kw))
+
+
+def dif_topk_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                  T_GD: int, T_con: int, compression_k: int = 0,
+                  shifts=(-1, 1), self_weight=None, W=None,
+                  engine: AltgdminEngine | None = None,
+                  backend: str | None = None, U_star=None):
+    """``dif_topk`` on the mesh: each gossip round permutes only the
+    ``compression_k`` (0 → d/4) largest-norm rows + their int32 indices
+    of the error-compensated iterate.  Same layouts/returns/topology
+    kwargs as :func:`dif_altgdmin_mesh`."""
+    return _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name,
+                                rule_name="topk_gossip", eta=eta,
+                                T_GD=T_GD, T_con=T_con, shifts=shifts,
+                                self_weight=self_weight, W=W, engine=engine,
+                                backend=backend, U_star=U_star,
+                                compression_k=compression_k)
+
+
+def dif_quantized_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                       T_GD: int, T_con: int, compression: str | None = None,
+                       shifts=(-1, 1), self_weight=None, W=None,
+                       engine: AltgdminEngine | None = None,
+                       backend: str | None = None, U_star=None):
+    """``dif_quantized`` on the mesh: the permuted payload is the
+    low-precision wire cast (``compression``: bf16 default / int8 /
+    int8_stochastic) of the error-compensated iterate; accumulation
+    stays f32.  Same layouts/returns/topology kwargs as
+    :func:`dif_altgdmin_mesh`."""
+    return _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name,
+                                rule_name="quantized_gossip", eta=eta,
+                                T_GD=T_GD, T_con=T_con, shifts=shifts,
+                                self_weight=self_weight, W=W, engine=engine,
+                                backend=backend, U_star=U_star,
+                                compression=compression)
+
+
+def dif_event_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                   T_GD: int, T_con: int, event_threshold: float = 0.0,
+                   shifts=(-1, 1), self_weight=None, W=None,
+                   engine: AltgdminEngine | None = None,
+                   backend: str | None = None, U_star=None):
+    """``dif_event`` on the mesh: a device re-broadcasts its iterate only
+    when it moved more than θ·‖U_g‖_F since the last send (the SPMD
+    program still executes the permute every round — the saving is a
+    message-count one on real event-driven networks).  θ = 0 recovers
+    :func:`dif_altgdmin_mesh` bit-identically."""
+    return _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name,
+                                rule_name="event_gossip", eta=eta,
+                                T_GD=T_GD, T_con=T_con, shifts=shifts,
+                                self_weight=self_weight, W=W, engine=engine,
+                                backend=backend, U_star=U_star,
+                                event_threshold=event_threshold)

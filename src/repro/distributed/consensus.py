@@ -37,12 +37,15 @@ center), ``none`` (no communication), plus the related-work combines —
 ``exact_diffusion`` (the projection-corrected combine of *Exact Subspace
 Diffusion for Decentralized Multitask Learning*, arXiv:2304.07358) and
 ``beyond_central`` (the communication-efficient single-round combine of
-*Beyond Centralization*, arXiv:2512.22675).  ``register_rule`` is open.
+*Beyond Centralization*, arXiv:2512.22675) — and the compressed wire
+rules ``topk_gossip`` / ``quantized_gossip`` / ``event_gossip`` (see
+:class:`CompressedGossipCombine`: stateful encode, compact payloads,
+error feedback).  ``register_rule`` is open.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -56,17 +59,32 @@ class CommSignature:
     ``pattern`` prices the exchange shape: ``"gossip"`` /``"neighbor"``
     send the iterate to every graph neighbour ``rounds_per_iter`` times;
     ``"central"`` is one gather + one broadcast; ``"none"`` is silent.
+
+    ``entries_per_round`` / ``bytes_per_entry`` describe the PAYLOAD of
+    one message: ``None`` means the dense d×r iterate at the network
+    model's native precision (every uncompressed rule), while the
+    compressed rules fill both so the pricing layer
+    (:func:`repro.core.comm_model.time_axis_from_signature`) sees the
+    smaller wire format instead of silently assuming a dense exchange.
     """
     pattern: str                 # "gossip" | "neighbor" | "central" | "none"
     rounds_per_iter: int
+    entries_per_round: Optional[int] = None   # None → dense d·r
+    bytes_per_entry: Optional[int] = None     # None → the model's native
 
     def bytes_per_iter(self, n_entries: int, itemsize: int, n_nodes: int,
                        degree: int) -> int:
-        """Bytes sent per node per outer iteration (benchmark tables)."""
+        """Bytes sent per node per outer iteration (benchmark tables).
+        The signature's own payload fields override the dense
+        ``n_entries`` / ``itemsize`` arguments when set."""
+        n = (self.entries_per_round if self.entries_per_round is not None
+             else n_entries)
+        bpe = (self.bytes_per_entry if self.bytes_per_entry is not None
+               else itemsize)
         if self.pattern == "central":
             # ring all-reduce equivalent: 2·(L−1)/L · size
-            return int(2 * (n_nodes - 1) / n_nodes * n_entries * itemsize)
-        return int(self.rounds_per_iter * degree * n_entries * itemsize)
+            return int(2 * (n_nodes - 1) / n_nodes * n * bpe)
+        return int(self.rounds_per_iter * degree * n * bpe)
 
 
 # ----------------------------------------------------------------------
@@ -219,7 +237,11 @@ class CombineRule:
 
     # ------------------------------------------------------- signature
 
-    def signature(self, T_con: int) -> CommSignature:
+    def signature(self, T_con: int, **params) -> CommSignature:
+        """The rule's per-iteration comm cost.  ``params`` carries the
+        optional payload context (problem dims ``d``/``r`` and the
+        compression knobs) — base rules ignore it; compressed rules use
+        it to fill ``entries_per_round``/``bytes_per_entry``."""
         raise NotImplementedError
 
     # ---------------------------------------------------------- shared
@@ -275,8 +297,31 @@ class CombineRule:
         """One gossip round in the pjit/trainer form: neighbour blocks
         come from ``jnp.roll`` over the leading node axis (XLA lowers the
         sharded roll to the same collective-permute).  ``weights``:
-        length-K+1 ``(w_self, w_shift1, ...)``."""
+        length-K+1 ``(w_self, w_shift1, ...)`` shared by every node, or a
+        per-node ``(L, K+1)`` table (column k+1 = each node's weight on
+        its shift-``shifts[k]`` neighbour — the
+        :func:`mesh_weights_from_matrix` layout) for non-uniform /
+        non-circulant mixing matrices."""
         nbrs = [jnp.roll(x, -s, axis=0) for s in shifts]
+        w = jnp.asarray(weights) if not isinstance(weights, (tuple, list)) \
+            else None
+        if w is not None and w.ndim == 2:
+            if w.shape[0] != x.shape[0]:
+                raise ValueError(
+                    f"per-node weight table has {w.shape[0]} rows but the "
+                    f"leading node axis is {x.shape[0]} — roll_round mixes "
+                    f"over the leading axis, one table row per node")
+            # every node is a real row of the leading axis here, so the
+            # table broadcasts directly; unfused chain in the promoted
+            # accumulator dtype (the fused combine kernel takes only
+            # per-shift scalars, not per-node tables)
+            acc_dt = _acc_dtype(x.dtype)
+            col = (slice(None),) + (None,) * (x.ndim - 1)
+            wt = w.astype(acc_dt)
+            acc = wt[:, 0][col] * x.astype(acc_dt)
+            for k, nbr in enumerate(nbrs):
+                acc = acc + wt[:, k + 1][col] * nbr.astype(acc_dt)
+            return acc.astype(x.dtype)
         return combine_blocks(x, nbrs, weights, backend=backend)
 
 
@@ -314,7 +359,7 @@ class GossipCombine(CombineRule):
             return out
         return gossip
 
-    def signature(self, T_con: int) -> CommSignature:
+    def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("gossip", T_con)
 
 
@@ -344,7 +389,7 @@ class NeighborCombine(CombineRule):
         return lambda z: self._mesh_round(z, axis_name, L, shifts_,
                                           weights, backend)
 
-    def signature(self, T_con: int) -> CommSignature:
+    def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("neighbor", 1)
 
 
@@ -361,7 +406,7 @@ class CentralCombine(CombineRule):
                         self_weight=None, *, W=None, backend="xla-ref"):
         return lambda z: jax.lax.pmean(z, axis_name)
 
-    def signature(self, T_con: int) -> CommSignature:
+    def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("central", 1)
 
 
@@ -378,7 +423,7 @@ class NoCombine(CombineRule):
                         self_weight=None, *, W=None, backend="xla-ref"):
         return lambda z: z
 
-    def signature(self, T_con: int) -> CommSignature:
+    def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("none", 0)
 
 
@@ -423,9 +468,408 @@ class BeyondCentralCombine(GossipCombine):
         return super().make_mesh_mixer(axis_name, L, 1, shifts,
                                        self_weight, W=W, backend=backend)
 
-    def signature(self, T_con: int) -> CommSignature:
+    def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("gossip", 1)
 
+
+# ----------------------------------------------------------------------
+# compressed / event-triggered wire rules
+# ----------------------------------------------------------------------
+
+def _scatter_replace_rows(xhat, vals, idx):
+    """Replace rows ``idx`` of each (d, r) block with ``vals`` (top-k
+    refresh).  Indices from top-k are unique, so the scatter is
+    order-independent and a FULL index set makes the result exactly
+    ``vals``'s source — the bit-identity anchor of ``k = d``."""
+    def one(x, v, i):
+        return x.at[i].set(v)
+    return jax.vmap(one)(xhat, vals, idx)
+
+
+class CompressedGossipCombine(GossipCombine):
+    """Base of the compressed-communication gossip rules.
+
+    These rules shrink what one gossip round puts on the wire.  Naive
+    compression of the d×r iterate itself stalls far from the dense
+    trajectory (an orthonormal-ish basis has no dominant rows to keep),
+    so the rules use the reference-copy error-feedback scheme of
+    CHOCO-SGD / EF21: every node maintains a PUBLIC COPY ``x̂_g`` of its
+    iterate — the value the network believes — replicated at its
+    neighbours, and each round refreshes the copy's stalest content with
+    a compact payload:
+
+        payload, x̂_g' = refresh(Z_g, x̂_g)      # what crosses the wire
+        x̂_j'          = apply(payload_j, x̂_j)  # neighbours' copies
+        Z_g'           = W_gg·Z_g + Σ_{j≠g} W_gj·x̂_j'
+
+    The copy state IS the error-feedback state: ``Z − x̂`` is exactly
+    the accumulated compression error, re-injected into every
+    subsequent payload, and it contracts as consensus tightens — so
+    compressed Dif-AltGDmin still converges to the paper's error floor.
+    The drivers thread the state through their ``lax.scan`` carry (the
+    mesh runtime's aux-carry slot).
+
+    The SELF term never crosses a wire, so the combine keeps it exact:
+    the simulator computes ``W @ X̂' + diag(W)·(Z − X̂')`` (one dense
+    combine on the refreshed copies — fused ``mix_rows`` on pallas
+    backends — plus the exact-self correction); the mesh ppermutes the
+    COMPACT payload per shift, applies it to the stored neighbour
+    copies, and merges the K+1 blocks in ONE fused ``gossip_combine``
+    dispatch per round.  A lossless refresh (k = d, θ = 0) makes
+    ``X̂' = Z`` bit-exact and the round IS the dense ``W @ Z`` product
+    bit-for-bit on the exact (unfused / x64) lowering — the numerics
+    anchor the tests pin.  Fused backends agree with the dense rule to
+    f32 round-off only: dense gossip hoists all T_con rounds into ONE
+    precomputed ``W^{T_con}`` combine, while a compressed rule must mix
+    round by round (the refresh is data-dependent).
+
+    Precision policy (the shared ``_fused_wanted`` gate): float64
+    operands take the exact reference encoder AND the unfused combine
+    chain — compression *semantics* are dtype-independent, only the
+    f32-accumulating kernels are avoided, so x64 runs stay exact.
+
+    The stateless ``make_sim_mixer``/``make_mesh_mixer`` entry points
+    are forbidden (they would silently drop the state); drivers use
+    ``make_sim_state_mixer``/``make_mesh_state_mixer`` and seed the
+    state with ``init_state`` (simulator) / ``init_mesh_state`` (one
+    copy of every neighbour's x̂ per device, zero-initialized on both
+    substrates so the copies agree without a setup exchange).
+    """
+
+    # ------------------------------------------------- rule interface
+
+    def resolve_params(self, d: int, r: int, **kw) -> dict:
+        """Static per-run parameters from the spec knobs + problem dims."""
+        raise NotImplementedError
+
+    def refresh(self, Z, xhat, node_ids, count, *, backend, **params):
+        """One round's wire encode for stacked blocks ``Z: (N, d, r)``:
+        returns ``(payload, xhat_new)`` — the compact payload that
+        crosses the wire and the node's refreshed public copy."""
+        raise NotImplementedError
+
+    def apply(self, payload, xhat, *, backend, **params):
+        """A receiver's side of ``refresh``: update a stored neighbour
+        copy ``xhat: (N, d, r)`` from a received payload.  Must
+        reproduce ``refresh``'s ``xhat_new`` bit-for-bit given the same
+        payload and copy (simulator ≡ mesh parity rests on it)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------- state
+
+    def init_state(self, Z_nodes, **kw):
+        """Simulator state: the stacked public copies ``x̂`` (zero — the
+        network starts with no beliefs), plus the round counter for
+        stochastic rules."""
+        xhat = jnp.zeros_like(Z_nodes)
+        if self._stochastic(**kw):
+            return (xhat, jnp.zeros((), jnp.int32))
+        return xhat
+
+    def init_mesh_state(self, z_local, n_shifts: int, **kw):
+        """Per-device mesh state: ``(x̂_self (1, d, r), x̂_nbrs
+        (n_shifts, 1, d, r))`` — this device's public copy plus its copy
+        of each shift-neighbour's x̂ (what the neighbour's payloads have
+        built up), all zero-initialized."""
+        own = jnp.zeros_like(z_local[None])
+        nbrs = jnp.zeros((n_shifts,) + own.shape, own.dtype)
+        if self._stochastic(**kw):
+            return (own, nbrs, jnp.zeros((), jnp.int32))
+        return own, nbrs
+
+    def _stochastic(self, **kw) -> bool:
+        return False
+
+    # ----------------------------------------------------- lowerings
+
+    def make_sim_mixer(self, W, T_con, *, backend="xla-ref"):
+        raise TypeError(f"combine rule {self.name!r} is stateful; use "
+                        f"make_sim_state_mixer / init_state")
+
+    def make_mesh_mixer(self, axis_name, L, T_con, shifts=(-1, 1),
+                        self_weight=None, *, W=None, backend="xla-ref"):
+        raise TypeError(f"combine rule {self.name!r} is stateful; use "
+                        f"make_mesh_state_mixer / init_mesh_state")
+
+    def make_sim_state_mixer(self, W, T_con: int, *,
+                             backend: str = "xla-ref", **kw) -> Callable:
+        """Simulator closure ``(Z (L, d, r), state) ↦ (Z', state')``:
+        T_con rounds of refresh + dense combine on the public copies +
+        exact-self correction."""
+        if T_con == 0:
+            return lambda Z, state: (Z, state)
+
+        def mix(Z, state):
+            N = Z.shape[0]
+            params = self.resolve_params(Z.shape[1], Z.shape[2], **kw)
+            ids = jnp.arange(N)
+            w_diag = jnp.diag(jnp.asarray(W)).astype(Z.dtype)[:, None, None]
+
+            def round_(carry, _):
+                Zc, st = carry
+                xhat, count = st if self._stochastic(**kw) else (st, None)
+                _, xhat2 = self.refresh(Zc, xhat, ids, count,
+                                        backend=backend, **params)
+                if _fused_wanted(backend, Zc.dtype):
+                    Z2 = stacked_dense_mix(xhat2, W, backend=backend)
+                else:
+                    # dense product on the refreshed copies, arithmetic-
+                    # identical to stacked_product's round
+                    Z2 = (W.astype(Zc.dtype)
+                          @ xhat2.reshape(N, -1)).reshape(Zc.shape)
+                # exact-self correction: the node's own block never
+                # crosses a wire.  A lossless refresh (k = d, θ = 0)
+                # makes Zc − xhat2 exactly zero, so the round stays the
+                # dense W @ Z product bit-for-bit.
+                Z2 = Z2 + w_diag * (Zc - xhat2)
+                st2 = ((xhat2, count + 1) if self._stochastic(**kw)
+                       else xhat2)
+                return (Z2, st2), None
+
+            (Z_fin, st_fin), _ = jax.lax.scan(round_, (Z, state), None,
+                                              length=T_con)
+            return Z_fin, st_fin
+        return mix
+
+    def make_mesh_state_mixer(self, axis_name: str, L: int, T_con: int,
+                              shifts: Sequence[int] = (-1, 1),
+                              self_weight: float | None = None, *,
+                              W=None, backend: str = "xla-ref",
+                              **kw) -> Callable:
+        """Per-device closure ``(z (d, r), state) ↦ (z', state')`` with
+        ``state = (x̂_self, x̂_nbrs[, count])`` from ``init_mesh_state``:
+        per round the COMPACT payload is exchanged by collective-permute
+        (one per distinct cyclic shift), applied to the stored neighbour
+        copies, and the K+1 blocks — exact self + refreshed copies —
+        merge in ONE fused ``gossip_combine`` dispatch."""
+        shifts_, weights = self._mesh_weights(L, shifts, self_weight, W)
+        if T_con == 0:
+            return lambda z, state: (z, state)
+
+        def mix(z, state):
+            d, r = z.shape
+            params = self.resolve_params(d, r, **kw)
+            ids = jax.lax.axis_index(axis_name)[None]
+            w = (weights if isinstance(weights, tuple)
+                 else weights[jax.lax.axis_index(axis_name)])
+
+            def round_(carry, _):
+                zc, st = carry
+                if self._stochastic(**kw):
+                    own, nbr_copies, count = st
+                else:
+                    (own, nbr_copies), count = st, None
+                payload, own2 = self.refresh(zc[None], own, ids, count,
+                                             backend=backend, **params)
+                nbrs2 = []
+                for i, s in enumerate(shifts_):
+                    perm = [(g, (g - s) % L) for g in range(L)]
+                    p = jax.tree.map(
+                        lambda x: jax.lax.ppermute(x, axis_name, perm),
+                        payload)
+                    nbrs2.append(self.apply(p, nbr_copies[i],
+                                            backend=backend, **params))
+                # exact-self combine: the device's own block goes in
+                # exact, neighbours as their refreshed public copies
+                z2 = combine_blocks(zc, [n[0] for n in nbrs2], w,
+                                    backend=backend)
+                nbr2 = (jnp.stack(nbrs2) if nbrs2
+                        else jnp.zeros_like(nbr_copies))
+                st2 = ((own2, nbr2, count + 1)
+                       if self._stochastic(**kw) else (own2, nbr2))
+                return (z2, st2), None
+
+            (z_fin, st_fin), _ = jax.lax.scan(round_, (z, state), None,
+                                              length=T_con)
+            return z_fin, st_fin
+        return mix
+
+
+class TopkGossipCombine(CompressedGossipCombine):
+    """``topk_gossip`` — rank-preserving top-k ROW refresh: per round
+    each node re-broadcasts the ``compression_k`` rows of its iterate
+    whose public copy drifted the most (largest ``‖Z − x̂‖`` row norms —
+    the ``compress_topk`` kernel selects, the wire carries the ABSOLUTE
+    ``Z`` rows + int32 indices, receivers replace those copy rows).
+    Keeping whole rows keeps the payload a valid factor slice;
+    ``compression_k = 0`` defaults to d/4 (a 4× value-entry reduction);
+    ``compression_k = d`` refreshes every row and recovers dense gossip
+    bit-identically on the exact path (see the base-class note on fused
+    backends).
+
+    Wire-format pricing: the signature prices k·r payload values at
+    4 bytes (f32 — a sparsified payload does not carry the simulation's
+    f64, since the production combine accumulates in f32 anyway) plus k
+    int32 row indices, against the dense baseline at the network
+    model's native precision.  At k = d/4 under the paper's f64 model
+    the 6.4× bytes reduction therefore decomposes as 3.2× from sending
+    fewer entries × 2× from the f32 wire; ``bench_compression`` reports
+    both factors separately."""
+
+    name = "topk_gossip"
+
+    def resolve_params(self, d, r, compression_k: int = 0, **_):
+        k = int(compression_k) or max(1, d // 4)
+        if not 1 <= k <= d:
+            raise ValueError(f"topk_gossip needs 1 <= compression_k <= d, "
+                             f"got k={k} for d={d}")
+        return {"k": k}
+
+    def refresh(self, Z, xhat, node_ids, count, *, backend, k):
+        from repro.kernels import ops
+        delta = Z - xhat                     # accumulated compression error
+        cb = backend if _fused_wanted(backend, Z.dtype) else "xla-ref"
+        _, idx = ops.compress_topk(delta, k, backend=cb)   # stalest rows
+        vals = jnp.take_along_axis(Z, idx[..., None], axis=1)
+        return (vals, idx), _scatter_replace_rows(xhat, vals, idx)
+
+    def apply(self, payload, xhat, *, backend, k):
+        vals, idx = payload
+        return _scatter_replace_rows(xhat, vals, idx)
+
+    def signature(self, T_con: int, *, d=None, r=None, compression_k=0,
+                  **_) -> CommSignature:
+        if d is None or r is None:
+            return CommSignature("gossip", T_con)
+        k = self.resolve_params(d, r, compression_k)["k"]
+        # f32 wire values (k·r) + int32 row indices (k): 4 bytes each
+        return CommSignature("gossip", T_con,
+                             entries_per_round=k * (r + 1),
+                             bytes_per_entry=4)
+
+
+class QuantizedGossipCombine(CompressedGossipCombine):
+    """``quantized_gossip`` — low-precision wire dtype with f32
+    accumulation: the DIFFERENCE ``Z − x̂`` is quantized and accumulated
+    onto the public copies, so the quantization error contracts with
+    consensus (exact convergence, no bf16-resolution floor on the
+    iterate itself).  Wire formats (``compression``):
+
+      * ``"bf16"`` (default) — round-to-nearest-even bfloat16 cast;
+        2 bytes/entry, no side information;
+      * ``"int8"`` — per-message max-abs scale, round-to-nearest int8;
+        1 byte/entry + one f32 scale per message;
+      * ``"int8_stochastic"`` — int8 with stochastic rounding
+        (deterministic counter-based keys: the same per-node draws on
+        both substrates, so simulator ≡ mesh parity holds bit-wise).
+
+    The combine itself always accumulates in f32 (or f64 on the exact
+    x64 path) — only the wire carries the low-precision payload.
+    """
+
+    name = "quantized_gossip"
+
+    WIRES = ("bf16", "int8", "int8_stochastic")
+
+    def resolve_params(self, d, r, compression=None, **_):
+        wire = compression or "bf16"
+        if wire not in self.WIRES:
+            raise ValueError(f"unknown quantized_gossip wire format "
+                             f"{wire!r}; expected one of {self.WIRES}")
+        return {"wire": wire}
+
+    def _stochastic(self, compression=None, **_):
+        return (compression or "bf16") == "int8_stochastic"
+
+    @staticmethod
+    def _int8_scale(delta):
+        scale = jnp.max(jnp.abs(delta), axis=(-2, -1), keepdims=True) / 127.0
+        return jnp.maximum(scale, jnp.finfo(delta.dtype).tiny)
+
+    def _dequant(self, q, scale, dtype, *, backend):
+        from repro.kernels import ops
+        cb = backend if _fused_wanted(backend, dtype) else "xla-ref"
+        return ops.dequant(q, scale, backend=cb)
+
+    def refresh(self, Z, xhat, node_ids, count, *, backend, wire):
+        delta = Z - xhat                     # accumulated compression error
+        if wire == "bf16":
+            q = delta.astype(jnp.bfloat16)
+            payload = (q,)
+            inc = q.astype(Z.dtype)
+        else:
+            scale = self._int8_scale(delta)
+            if wire == "int8_stochastic":
+                key = jax.random.fold_in(jax.random.PRNGKey(0), count)
+                keys = jax.vmap(jax.random.fold_in, (None, 0))(key, node_ids)
+                u = jax.vmap(lambda kk: jax.random.uniform(
+                    kk, Z.shape[1:], jnp.float32))(keys)
+                qf = jnp.floor(delta / scale + u.astype(Z.dtype))
+            else:
+                qf = jnp.rint(delta / scale)
+            q = jnp.clip(qf, -127, 127).astype(jnp.int8)
+            payload = (q, scale)
+            inc = self._dequant(q, scale, Z.dtype, backend=backend)
+        return payload, xhat + inc
+
+    def apply(self, payload, xhat, *, backend, wire):
+        if wire == "bf16":
+            return xhat + payload[0].astype(xhat.dtype)
+        q, scale = payload
+        return xhat + self._dequant(q, scale, xhat.dtype, backend=backend)
+
+    def signature(self, T_con: int, *, d=None, r=None, compression=None,
+                  **_) -> CommSignature:
+        if d is None or r is None:
+            return CommSignature("gossip", T_con)
+        wire = self.resolve_params(d, r, compression)["wire"]
+        if wire == "bf16":
+            return CommSignature("gossip", T_con, entries_per_round=d * r,
+                                 bytes_per_entry=2)
+        # int8 payload + one f32 scale (4 one-byte entries)
+        return CommSignature("gossip", T_con, entries_per_round=d * r + 4,
+                             bytes_per_entry=1)
+
+
+class EventGossipCombine(CompressedGossipCombine):
+    """``event_gossip`` — event-triggered exchange: a node re-broadcasts
+    its full iterate only when its public copy went stale,
+    ``‖Z_g − x̂_g‖_F > θ·‖Z_g‖_F`` (θ = ``event_threshold``); otherwise
+    neighbours keep combining with the last-sent copy.  θ = 0 always
+    triggers and recovers dense gossip bit-identically on the exact
+    path (see the base-class note on fused backends).
+
+    The SPMD lowerings still execute the exchange every round (a static
+    program cannot elide a send), so the saving is a *message-count*
+    one on real event-driven networks; the static signature therefore
+    prices the θ = 0 worst case, and ``benchmarks.kernel_bench.
+    bench_compression`` reports the measured send fraction."""
+
+    name = "event_gossip"
+
+    def resolve_params(self, d, r, event_threshold: float = 0.0, **_):
+        if event_threshold < 0:
+            raise ValueError(f"event_threshold must be >= 0, got "
+                             f"{event_threshold}")
+        return {"threshold": float(event_threshold)}
+
+    @staticmethod
+    def _trigger(Z, xhat, threshold):
+        """Per-node send decision: ``‖Z − x̂‖_F > θ·‖Z‖_F`` — ONE
+        definition shared by the round encode and the benchmark
+        telemetry, so the reported send fraction always measures the
+        condition the rule actually uses."""
+        moved = jnp.sqrt(jnp.sum((Z - xhat) ** 2, axis=(-2, -1)))
+        scale = jnp.sqrt(jnp.sum(Z ** 2, axis=(-2, -1)))
+        return moved > threshold * scale
+
+    def refresh(self, Z, xhat, node_ids, count, *, backend, threshold):
+        trig = self._trigger(Z, xhat, threshold)
+        S = jnp.where(trig[:, None, None], Z, xhat)    # absolute resend
+        return (S,), S
+
+    def apply(self, payload, xhat, *, backend, threshold):
+        return payload[0]
+
+    def send_fraction(self, Z, xhat, threshold: float):
+        """Measured trigger rate of one round (benchmark telemetry —
+        the static signature prices the worst case instead)."""
+        return jnp.mean(self._trigger(Z, xhat, threshold)
+                        .astype(jnp.float32))
+
+    def signature(self, T_con: int, **_) -> CommSignature:
+        # static pricing cannot see the trigger rate: θ = 0 worst case
+        return CommSignature("gossip", T_con)
 
 # ----------------------------------------------------------------------
 # registry
@@ -454,5 +898,7 @@ def rule_names() -> tuple[str, ...]:
 
 
 for _rule in (GossipCombine(), NeighborCombine(), CentralCombine(),
-              NoCombine(), ExactDiffusionCombine(), BeyondCentralCombine()):
+              NoCombine(), ExactDiffusionCombine(), BeyondCentralCombine(),
+              TopkGossipCombine(), QuantizedGossipCombine(),
+              EventGossipCombine()):
     register_rule(_rule)

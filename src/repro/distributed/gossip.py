@@ -28,6 +28,7 @@ import functools
 from typing import Sequence
 
 import jax
+import numpy as np
 
 from repro.distributed.consensus import GossipCombine, get_rule
 from repro.utils.compat import shard_map as _shard_map
@@ -50,14 +51,39 @@ def torus_shifts(rows: int, cols: int):
 # ---------------------------------------------------------------- pjit form
 
 def roll_gossip(tree, T_con: int, shifts: Sequence[int] = (-1, 1),
-                self_weight: float | None = None, *,
+                self_weight: float | None = None, *, W=None,
                 backend: str = "xla-ref"):
-    """T_con gossip rounds over the leading (node) axis of every leaf."""
+    """T_con gossip rounds over the leading (node) axis of every leaf.
+
+    Without ``W`` this is the uniform circulant mixer of ``shifts`` /
+    ``self_weight`` (the historical trainer form).  Pass ``W=`` — ANY
+    concrete (L, L) mixing matrix — to gossip with the matrix's actual
+    weights: the consensus layer decomposes it into cyclic shifts plus
+    per-node weight rows (circulant matrices collapse to the shared
+    scalar fast path, bit-compatible with the legacy form; irregular
+    Metropolis/ER matrices roll with an (L, K+1) table each node indexes
+    by its row).  Leaves whose leading axis disagrees with W's size
+    raise a ``ValueError`` instead of silently mixing with wrong
+    weights."""
     if T_con == 0:
         return tree
     rule = get_rule("gossip")
-    sw, wn = ring_weights(shifts, self_weight)
-    weights = (sw,) + (wn,) * len(shifts)
+    if W is not None:
+        # one source of truth with the shard_map mesh lowering:
+        # _mesh_weights collapses a circulant W to shared scalars and
+        # keeps an (L, K+1) per-node table otherwise
+        L = np.asarray(W).shape[0]
+        shifts, weights = GossipCombine._mesh_weights(L, (), None, W)
+        bad = [x.shape for x in jax.tree.leaves(tree)
+               if x.shape[:1] != (L,)]
+        if bad:
+            raise ValueError(
+                f"roll_gossip W= is {L}×{L} but leaves have leading "
+                f"(node) axes {sorted({s[0] for s in bad})} — every leaf "
+                f"must carry one row per node")
+    else:
+        sw, wn = ring_weights(shifts, self_weight)
+        weights = (sw,) + (wn,) * len(shifts)
 
     def one_round(t):
         return jax.tree.map(

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import altgdmin_ls as _ls
+from repro.kernels import compress as _cp
 from repro.kernels import gossip_axpy as _ga
 from repro.kernels import ref as _ref
 
@@ -318,6 +319,42 @@ def _gossip_combine(z, neighbors, weights, *, backend):
                              weights, blk_rows=R,
                              interpret=_interp(backend))
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def compress_topk(M, k, *, backend=None):
+    """Rank-preserving top-k ROW sparsification of node blocks: per
+    (d, r) block the k rows with the largest squared row norms.
+    M: (N, d, r) → (vals (N, k, r) in M.dtype, descending row-norm
+    order; idx (N, k) int32).  The wire carries (vals, idx) — k·(r+1)
+    entries instead of d·r."""
+    return _compress_topk(M, k=int(k), backend=resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def _compress_topk(M, *, k, backend):
+    if M.ndim != 3:
+        raise ValueError(f"compress_topk wants node-batched (N, d, r) "
+                         f"blocks, got shape {M.shape}")
+    if not 1 <= k <= M.shape[1]:
+        raise ValueError(f"compress_topk needs 1 <= k <= d, got k={k}, "
+                         f"d={M.shape[1]}")
+    if backend == "xla-ref":
+        return _ref.ref_compress_topk(M, k)
+    return _cp.compress_topk(M, k, interpret=_interp(backend))
+
+
+def dequant(q, scale, *, backend=None):
+    """Decode an int8 wire payload: q · scale per node block (f32
+    accumulation on the kernel backends).  q: (N, d, r) int8;
+    scale: (N, 1, 1) → (N, d, r) in scale.dtype."""
+    return _dequant(q, scale, backend=resolve_backend(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _dequant(q, scale, *, backend):
+    if backend == "xla-ref":
+        return _ref.ref_dequant(q, scale)
+    return _cp.dequant(q, scale, interpret=_interp(backend))
 
 
 def mix_nodes(Z, W, *, blk_c=512, backend=None):

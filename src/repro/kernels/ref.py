@@ -81,6 +81,24 @@ def ref_altgdmin_grad(X, U, B, y):
                       B.astype(jnp.float32))
 
 
+def ref_compress_topk(M, k):
+    """Top-k row sparsification oracle: per (d, r) block, the k rows with
+    the largest squared row norms (norms in the OPERAND dtype — the f64
+    exact path stays exact; on f32 data this matches the kernel's f32
+    accumulation bit-for-bit).  M: (N, d, r) → (vals (N, k, r), idx
+    (N, k) int32, descending row-norm order, ties to lowest index)."""
+    s = jnp.sum(M * M, axis=-1)                         # (N, d)
+    _, idx = jax.lax.top_k(s, k)                        # (N, k) stable
+    vals = jnp.take_along_axis(M, idx[..., None], axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def ref_dequant(q, scale):
+    """int8 wire decode oracle: q.astype(scale.dtype) * scale.
+    q: (N, d, r); scale: (N, 1, 1) → (N, d, r) in scale.dtype."""
+    return q.astype(scale.dtype) * scale
+
+
 def ref_gossip_combine(z, neighbors, weights):
     """z ← w₀·z + Σ_k w_{k+1}·neighbors[k].  z: (...,), neighbors:
     (K, ...), weights: (K+1,) — per-shift values (uniform rings pass the

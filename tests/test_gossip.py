@@ -159,3 +159,51 @@ def test_comm_bytes_ordering():
 def test_invalid_strategy_raises():
     with pytest.raises(ValueError):
         AggregationConfig(strategy="telepathy")
+
+
+# ------------------------- weighted roll_gossip (PR-5 satellite bugfix)
+
+def test_roll_gossip_weighted_matrix_matches_agree():
+    """Regression: roll_gossip used to be uniform-ring only and would
+    silently mix with wrong weights on any other topology.  With ``W=``
+    it must reproduce the exact mixing product for an irregular
+    Metropolis matrix (per-node weight-table path)."""
+    from repro.distributed import erdos_renyi, metropolis_weights
+    g = erdos_renyi(8, 0.45, seed=2)
+    assert len({int(d) for d in g.degrees}) > 1        # genuinely irregular
+    W = jnp.asarray(metropolis_weights(g))
+    Z = jax.random.normal(jax.random.PRNGKey(3), (8, 5, 3), jnp.float64)
+    for t_con in (1, 4):
+        got = roll_gossip(Z, t_con, W=np.asarray(W))
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(agree(Z, W, t_con)),
+                                   rtol=1e-12, atol=1e-13)
+
+
+def test_roll_gossip_circulant_matrix_collapses_to_legacy_path():
+    """A circulant W hands roll_gossip the same shared scalar weights as
+    the historical shifts/self_weight form — bit-identical rounds."""
+    Z = jax.random.normal(jax.random.PRNGKey(4), (8, 4, 2), jnp.float64)
+    W = circulant_weights(8, (-1, 1))
+    got = roll_gossip(Z, 3, W=W)
+    legacy = roll_gossip(Z, 3, shifts=(-1, 1))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+def test_roll_gossip_weighted_pytree_and_leaf_validation():
+    """The table path applies per-node rows to every leaf; a leaf whose
+    leading axis disagrees with W raises a clear error instead of
+    silently mixing with wrong weights."""
+    from repro.distributed import erdos_renyi, metropolis_weights
+    W = metropolis_weights(erdos_renyi(8, 0.45, seed=2))
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(5), (8, 3),
+                                   jnp.float64),
+            "b": jax.random.normal(jax.random.PRNGKey(6), (8, 2, 2),
+                                   jnp.float64)}
+    out = roll_gossip(tree, 2, W=W)
+    Wj = jnp.asarray(W)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(agree(tree["a"], Wj, 2)),
+                               rtol=1e-12, atol=1e-13)
+    with pytest.raises(ValueError, match="leading"):
+        roll_gossip({"bad": jnp.ones((4, 3))}, 1, W=W)

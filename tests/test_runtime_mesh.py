@@ -395,3 +395,138 @@ def test_weighted_combine_single_dispatch_per_round():
                        timeout=1200)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
     assert "OK weighted-combine" in r.stdout
+
+
+# --------------------------- compressed consensus rules (PR 5)
+
+COMPRESSED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import sys
+    sys.path.insert(0, "src")
+    import dataclasses
+    import numpy as np
+    from repro.api import (ExperimentSpec, ProblemSpec, TopologySpec,
+                           InitSpec, SolverSpec, EngineSpec,
+                           run_experiment)
+
+    solver, backend = sys.argv[1], sys.argv[2]
+    kw = {"dif_topk": {"compression_k": 12},
+          "dif_quantized": {"compression": "int8_stochastic"},
+          "dif_event": {"event_threshold": 0.05}}[solver]
+    # irregular weighted graph: the per-device weight table path AND the
+    # compact-payload ppermute path run together
+    spec = ExperimentSpec(
+        problem=ProblemSpec(d=48, T=32, r=3, n=25, L=8, kappa=1.5),
+        topology=TopologySpec(family="erdos_renyi", p=0.45, seed=2,
+                              weights="metropolis"),
+        init=InitSpec(T_pm=15, T_con=6),
+        solver=SolverSpec(name=solver, T_GD=40, T_con=2, **kw),
+        engine=EngineSpec(backend=backend))
+
+    sim = run_experiment(spec, key=0)
+    hw = run_experiment(dataclasses.replace(spec, substrate="mesh"),
+                        key=0)
+    drift = float(np.max(np.abs(np.asarray(hw.U_nodes)
+                                - np.asarray(sim.U_nodes))))
+    assert drift <= 1e-7, f"U drift {drift} for {solver} on {backend}"
+    np.testing.assert_allclose(hw.sd_max, sim.sd_max,
+                               rtol=1e-7, atol=1e-9)
+    print("OK", solver, backend, drift)
+""")
+
+COMPRESSED_SOLVERS = ["dif_topk", "dif_quantized", "dif_event"]
+
+
+@pytest.mark.parametrize("backend", ["xla-ref", "pallas-interpret"])
+@pytest.mark.parametrize("solver", COMPRESSED_SOLVERS)
+def test_compressed_mesh_matches_simulator(solver, backend):
+    """Acceptance (PR 5): the compressed solvers — whose reference-copy
+    error-feedback state rides the aux scan carry and whose COMPACT
+    payloads (top-k rows + indices / int8 + scale / triggered resends)
+    are what crosses the collective-permutes — match their simulator
+    trajectories to <= 1e-7 on a Metropolis-weighted irregular-ER spec,
+    on the seed-numerics backend AND the fused kernel backend."""
+    r = subprocess.run([sys.executable, "-c", COMPRESSED_SCRIPT, solver,
+                        backend],
+                       capture_output=True, text=True, cwd=REPO_ROOT,
+                       timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert f"OK {solver} {backend}" in r.stdout
+
+
+COMPRESSED_COMBINE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import sys
+    sys.path.insert(0, "src")
+    import jax.numpy as jnp, numpy as np
+    from repro.core import generate_problem, node_view, \\
+        decentralized_spectral_init
+    from repro.core.runtime import dif_topk_mesh
+    from repro.distributed import circulant_weights
+    from repro.utils.compat import make_mesh
+    from repro.kernels import ops
+    from repro.kernels import compress as cpk
+
+    # the compressed round must stay ONE fused gossip_combine dispatch
+    # per round (after the compact-payload permutes + copy refresh), and
+    # the compress_topk kernel is what encodes the payload
+    calls = {"combine": 0, "topk": 0}
+    orig_combine = ops.gossip_combine
+    def counting_combine(*a, **kw):
+        calls["combine"] += 1
+        return orig_combine(*a, **kw)
+    ops.gossip_combine = counting_combine
+    orig_topk = cpk.compress_topk
+    def counting_topk(*a, **kw):
+        calls["topk"] += 1
+        return orig_topk(*a, **kw)
+    cpk.compress_topk = counting_topk
+
+    L, T_con = 8, 3
+    prob = generate_problem(jax.random.PRNGKey(0), d=32, T=16, r=3, n=20,
+                            L=L, kappa=1.5, dtype=jnp.float32)
+    Xg, yg = node_view(prob)
+    W = jnp.asarray(circulant_weights(L, (-1, 1)), jnp.float32)
+    init = decentralized_spectral_init(
+        jax.random.PRNGKey(1), Xg, yg, W, kappa=prob.kappa, mu=prob.mu,
+        r=prob.r, T_pm=10, T_con=4)
+    mesh = make_mesh((L,), ("nodes",))
+    U, B = dif_topk_mesh(init.U0, Xg, yg, mesh, "nodes", eta=1e-4,
+                         T_GD=4, T_con=T_con, compression_k=8,
+                         backend="pallas-interpret")
+    jax.block_until_ready(U)
+    assert calls["combine"] == 1, \\
+        f"expected ONE fused combine per compressed round, " \\
+        f"got {calls['combine']}"
+    assert calls["topk"] == 1, calls["topk"]
+    assert np.all(np.isfinite(np.asarray(U)))
+
+    # xla-ref keeps the exact unfused chain + reference encoder: no
+    # fused kernel dispatches at all
+    calls["combine"] = calls["topk"] = 0
+    U2, _ = dif_topk_mesh(init.U0, Xg, yg, mesh, "nodes", eta=1e-4,
+                          T_GD=4, T_con=T_con, compression_k=8,
+                          backend="xla-ref")
+    jax.block_until_ready(U2)
+    assert calls["combine"] == 0 and calls["topk"] == 0, calls
+    np.testing.assert_allclose(np.asarray(U), np.asarray(U2),
+                               rtol=2e-4, atol=2e-5)
+    print("OK compressed-combine")
+""")
+
+
+def test_compressed_combine_single_dispatch_per_round():
+    """Acceptance (PR 5): compression does not unfuse the combine — on
+    pallas backends each compressed gossip round is still ONE fused
+    gossip_combine dispatch (plus the compress_topk payload encode);
+    xla-ref keeps the exact chain with zero fused dispatches."""
+    r = subprocess.run([sys.executable, "-c", COMPRESSED_COMBINE_SCRIPT],
+                       capture_output=True, text=True, cwd=REPO_ROOT,
+                       timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "OK compressed-combine" in r.stdout
