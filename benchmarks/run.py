@@ -50,6 +50,7 @@ def main() -> None:
     from benchmarks.kernel_bench import (bench_altgdmin_engine,
                                          bench_compression,
                                          bench_consensus, bench_kernels)
+    from benchmarks.system_bench import bench_system
 
     t0 = time.time()
     engine_rows = bench_altgdmin_engine(quick=args.quick)
@@ -58,6 +59,8 @@ def main() -> None:
     emit("consensus_combine", consensus_rows, args.out)
     compression_rows = bench_compression(quick=args.quick)
     emit("compression_combine", compression_rows, args.out)
+    system_rows = bench_system(quick=args.quick)
+    emit("system_dropout", system_rows, args.out)
     bench_json = {
         "benchmark": "altgdmin_engine",
         "description": "fused node-batched AltGDmin iteration engine: "
@@ -86,6 +89,16 @@ def main() -> None:
                            "simulator lowering; the event rule also "
                            "reports its measured send fraction",
             "rows": compression_rows,
+        },
+        "system": {
+            "description": "system-realism layer: convergence vs "
+                           "SIMULATED seconds (event-driven clock) — "
+                           "dense dif_altgdmin under an always-on "
+                           "SystemSpec vs the dropout-tolerant "
+                           "dif_partial/dif_stale/dif_pushsum under a "
+                           "seeded 30%-dropout Bernoulli availability "
+                           "schedule, shared materialization",
+            "rows": system_rows,
         },
     }
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -4,11 +4,13 @@
 # dispatch.
 from repro.api.spec import (
     ExperimentSpec, ProblemSpec, TopologySpec, InitSpec, SolverSpec,
-    EngineSpec, CommSpec, GRAPH_FAMILIES, WEIGHT_SCHEMES, SUBSTRATES,
+    EngineSpec, CommSpec, SystemSpec, GRAPH_FAMILIES, WEIGHT_SCHEMES,
+    SUBSTRATES, AVAILABILITY_KINDS,
 )
 from repro.api.registry import (
     SOLVERS, SolverDef, register_solver, get_solver, solver_names,
 )
 from repro.api.runner import (
     Trace, Materialized, run_experiment, materialize, comm_time_axis,
+    system_time_axis,
 )

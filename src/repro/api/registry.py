@@ -45,6 +45,7 @@ class SolverDef:
     decentralized: bool = True
     mesh_fn: Callable | None = None  # shard_map runtime, if one exists
     spec_kwargs: tuple = ()          # extra SolverSpec fields fn takes
+    takes_avail: bool = False        # consumes a (T_GD, L) avail mask
 
     @property
     def mesh_capable(self) -> bool:
@@ -143,16 +144,35 @@ register_solver(SolverDef(
     name="dif_topk", fn=_alg.dif_topk_altgdmin,
     topology="W", combine="topk_gossip",
     mesh_fn=_runtime.dif_topk_mesh,
-    spec_kwargs=("compression_k",)))
+    spec_kwargs=("compression_k", "consensus_gamma")))
 
 register_solver(SolverDef(
     name="dif_quantized", fn=_alg.dif_quantized_altgdmin,
     topology="W", combine="quantized_gossip",
     mesh_fn=_runtime.dif_quantized_mesh,
-    spec_kwargs=("compression",)))
+    spec_kwargs=("compression", "consensus_gamma")))
 
 register_solver(SolverDef(
     name="dif_event", fn=_alg.dif_event_altgdmin,
     topology="W", combine="event_gossip",
     mesh_fn=_runtime.dif_event_mesh,
-    spec_kwargs=("event_threshold",)))
+    spec_kwargs=("event_threshold", "consensus_gamma")))
+
+# dropout-tolerant variants (system-realism layer): the runner
+# materializes the experiment's SystemSpec availability mask — one
+# (T_GD, L) fault schedule shared by the trajectory AND the simulated
+# time axis — and forwards it as ``avail=`` on both substrates
+register_solver(SolverDef(
+    name="dif_partial", fn=_alg.dif_partial_altgdmin,
+    topology="W", combine="partial_gossip",
+    mesh_fn=_runtime.dif_partial_mesh, takes_avail=True))
+
+register_solver(SolverDef(
+    name="dif_stale", fn=_alg.dif_stale_altgdmin,
+    topology="W", combine="stale_gossip",
+    mesh_fn=_runtime.dif_stale_mesh, takes_avail=True))
+
+register_solver(SolverDef(
+    name="dif_pushsum", fn=_alg.dif_pushsum_altgdmin,
+    topology="W", combine="push_sum_gossip",
+    mesh_fn=_runtime.dif_pushsum_mesh, takes_avail=True))

@@ -35,8 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.registry import SolverDef, get_solver
-from repro.api.spec import ExperimentSpec
+from repro.api.spec import ExperimentSpec, SystemSpec
 from repro.core import comm_model as _cm
+from repro.core import system_clock as _sysclock
 from repro.core.altgdmin import RunResult, resolve_eta
 from repro.core.problem import (MTRLProblem, generate_problem, node_view,
                                 split_samples)
@@ -71,6 +72,9 @@ class Trace:
     ``time_axis`` is the cumulative emulated wall-clock under the spec's
     comm model, priced by the solver's communication pattern (gossip /
     neighbor / central) — the x-axis of the paper's Fig. 1 right panes.
+    ``time_axis_source`` records how it was priced: ``"closed_form"``
+    (the comm-model formula) or ``"simulated"`` (the event-driven
+    system clock, whenever the spec carries a SystemSpec).
     """
     spec: ExperimentSpec
     U_nodes: jax.Array
@@ -81,6 +85,7 @@ class Trace:
     eta: float
     time_axis: np.ndarray
     materialized: Materialized
+    time_axis_source: str = "closed_form"
 
     @property
     def final_sd_max(self) -> float:
@@ -148,7 +153,63 @@ def comm_time_axis(spec: ExperimentSpec, solver: SolverDef,
     return _cm.time_axis_from_signature(
         sig, spec.solver.T_GD, p.d, p.r,
         p.L, graph.max_degree, compute,
-        model=_COMM_MODELS[c.model], seed=c.seed)
+        model=_COMM_MODELS[c.model], rng=c.rng())
+
+
+def _system_model(spec: ExperimentSpec) -> _cm.NetworkModel:
+    """The comm model with the SystemSpec's link overrides applied."""
+    model = _COMM_MODELS[spec.comm.model]
+    s = spec.system
+    if s is not None and (s.latency_s is not None
+                         or s.jitter_std_s is not None):
+        model = dataclasses.replace(
+            model,
+            latency_s=(model.latency_s if s.latency_s is None
+                       else s.latency_s),
+            jitter_std_s=(model.jitter_std_s if s.jitter_std_s is None
+                          else s.jitter_std_s))
+    return model
+
+
+def system_time_axis(spec: ExperimentSpec, solver: SolverDef, graph: Graph,
+                     avail: np.ndarray | None = None,
+                     send_frac: np.ndarray | None = None) -> np.ndarray:
+    """Simulated wall-clock axis under the spec's :class:`SystemSpec` —
+    the event-driven clock of :mod:`repro.core.system_clock` replacing
+    the closed-form pricing.  ``avail`` reuses a mask the solver run
+    already materialized (one fault schedule for trajectory AND time);
+    ``send_frac`` feeds the event rule's measured per-iteration trigger
+    rate into the wire pricing.  Non-gossip patterns (central / no
+    communication) keep the closed-form axis under the overridden link
+    model: the clock simulates neighbour gossip only."""
+    p, c, s = spec.problem, spec.comm, spec.system
+    T_GD = spec.solver.T_GD
+    compute = c.compute_s_per_iter
+    if "local_steps" in solver.spec_kwargs:
+        compute *= spec.solver.local_steps
+    sig = solver.signature(spec.solver.T_con, d=p.d, r=p.r,
+                           compression=spec.solver.compression,
+                           compression_k=spec.solver.compression_k,
+                           event_threshold=spec.solver.event_threshold)
+    model = _system_model(spec)
+    if sig.pattern in ("central", "none") or sig.rounds_per_iter == 0:
+        return _cm.time_axis_from_signature(
+            sig, T_GD, p.d, p.r, p.L, graph.max_degree, compute,
+            model=model, rng=c.rng())
+    if avail is None:
+        avail = (s.availability_mask(T_GD, p.L) if solver.takes_avail
+                 else np.ones((T_GD, p.L), bool))
+    entries = sig.entries_per_round
+    return _sysclock.simulated_time_axis(
+        avail=avail, rounds_per_iter=sig.rounds_per_iter,
+        adj=np.asarray(graph.adj), model=model,
+        compute_s_per_iter=compute, speeds=s.node_speeds(p.L),
+        straggler_prob=s.straggler_prob,
+        straggler_factor=s.straggler_factor,
+        n_entries=p.d * p.r if entries is None else entries,
+        bytes_per_entry=sig.bytes_per_entry,
+        rng=np.random.default_rng([c.seed, s.seed]),
+        send_fraction=send_frac)
 
 
 def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
@@ -174,36 +235,63 @@ def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
     # non-default solver knob on a solver that ignores it must raise
     # instead of silently running without it
     for field, default in (("local_steps", 1), ("compression", None),
-                           ("compression_k", 0), ("event_threshold", 0.0)):
+                           ("compression_k", 0), ("event_threshold", 0.0),
+                           ("consensus_gamma", 1.0)):
         value = getattr(spec.solver, field)
         if value != default and field not in solver.spec_kwargs:
             raise ValueError(
                 f"solver {solver.name!r} does not consume {field} "
                 f"(got {field}={value}); only solvers declaring it in "
                 f"spec_kwargs honor the field")
+    # availability: the SystemSpec's fault schedule feeds the
+    # dropout-tolerant solvers; a faulty schedule on a solver with no
+    # notion of dropped nodes must raise, not silently run fault-free
+    if (spec.system is not None and not spec.system.is_always_on
+            and not solver.takes_avail):
+        raise ValueError(
+            f"spec.system schedules node dropout but solver "
+            f"{solver.name!r} cannot consume an availability mask; use "
+            f"one of the dropout-tolerant solvers (dif_partial / "
+            f"dif_stale / dif_pushsum)")
+    avail_np = None
+    if solver.takes_avail:
+        sys_spec = spec.system if spec.system is not None else SystemSpec()
+        avail_np = sys_spec.availability_mask(spec.solver.T_GD,
+                                              spec.problem.L)
     mat = materialize(spec, key) if materialized is None else materialized
     eta = _resolve_spec_eta(spec, mat.init)
     eng = resolve_engine(engine, spec.engine.backend,
                          blk_d=spec.engine.blk_d)
     if spec.substrate == "mesh":
-        result = _run_mesh(spec, solver, mat, eng, eta)
+        result = _run_mesh(spec, solver, mat, eng, eta, avail=avail_np)
     else:
         extra = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
+        if avail_np is not None:
+            extra["avail"] = jnp.asarray(avail_np)
         result = solver.call(mat.init.U0, mat.Xg, mat.yg, mat.W, mat.adj,
                              eta=eta, T_GD=spec.solver.T_GD,
                              T_con=spec.solver.T_con,
                              U_star=mat.problem.U_star, engine=eng,
                              **extra)
+    if spec.system is not None:
+        sf = getattr(result, "send_frac", None)
+        time_axis = system_time_axis(
+            spec, solver, mat.graph, avail=avail_np,
+            send_frac=None if sf is None else np.asarray(sf))
+        source = "simulated"
+    else:
+        time_axis = comm_time_axis(spec, solver, mat.graph)
+        source = "closed_form"
     return Trace(spec=spec, U_nodes=result.U_nodes, B_nodes=result.B_nodes,
                  sd_max=np.asarray(result.sd_max),
                  sd_mean=np.asarray(result.sd_mean),
                  spread=np.asarray(result.spread), eta=result.eta,
-                 time_axis=comm_time_axis(spec, solver, mat.graph),
-                 materialized=mat)
+                 time_axis=time_axis, materialized=mat,
+                 time_axis_source=source)
 
 
 def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
-              eng, eta: float) -> RunResult:
+              eng, eta: float, avail: np.ndarray | None = None) -> RunResult:
     topo, p = spec.topology, spec.problem
     if not solver.mesh_capable:
         raise ValueError(f"solver {solver.name!r} has no mesh runtime; "
@@ -217,6 +305,8 @@ def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
                          f"L={p.L} but {n_dev} devices are available")
     mesh = make_mesh((p.L,), ("nodes",))
     kw = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
+    if avail is not None:
+        kw.update(avail=jnp.asarray(avail))
     if topo.weights == "circulant":
         # mesh-native uniform weights: each shift one collective-permute
         kw.update(shifts=topo.shifts, self_weight=topo.self_weight)

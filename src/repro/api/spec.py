@@ -38,6 +38,7 @@ GRAPH_FAMILIES = ("erdos_renyi", "ring", "path", "torus2d", "hypercube",
 WEIGHT_SCHEMES = ("metropolis", "equal_neighbor", "lazy", "circulant")
 SUBSTRATES = ("simulator", "mesh")
 COMM_MODELS = ("ethernet-1gbps", "tpu-ici")
+AVAILABILITY_KINDS = ("always", "bernoulli", "markov")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,7 +167,12 @@ class SolverSpec:
       * ``compression_k``    — ``dif_topk``: rows kept per gossip round
         (0 → d/4);
       * ``event_threshold``  — ``dif_event``: relative-change trigger θ
-        (0 → always send, i.e. dense gossip).
+        (0 → always send, i.e. dense gossip);
+      * ``consensus_gamma``  — compressed rules: the CHOCO consensus
+        step size γ ∈ (0, 1] relaxing each round toward the combined
+        value, ``Z ← Z + γ(combine(Z) − Z)`` — γ < 1 keeps ``dif_topk``
+        stable at aggressive compression (k ≪ d/4); γ = 1 is the
+        historical full step (bit-identical to pre-γ trajectories).
     """
     name: str = "dif_altgdmin"
     T_GD: int = 250
@@ -177,6 +183,7 @@ class SolverSpec:
     compression: Optional[str] = None
     compression_k: int = 0
     event_threshold: float = 0.0
+    consensus_gamma: float = 1.0
 
     def __post_init__(self):
         if self.local_steps < 1:
@@ -188,6 +195,9 @@ class SolverSpec:
         if self.event_threshold < 0:
             raise ValueError(f"event_threshold must be >= 0, got "
                              f"{self.event_threshold}")
+        if not 0.0 < self.consensus_gamma <= 1.0:
+            raise ValueError(f"consensus_gamma must be in (0, 1] (1 = the "
+                             f"full CHOCO step), got {self.consensus_gamma}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,6 +220,111 @@ class CommSpec:
             raise ValueError(f"unknown comm model {self.model!r}; "
                              f"expected one of {COMM_MODELS}")
 
+    def rng(self) -> np.random.Generator:
+        """The ONE seeded generator every priced or simulated time axis
+        draws its jitter from — two runs of the same spec produce
+        identical axes."""
+        return np.random.default_rng(self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """Fault-injection and simulated-time model — the system-realism
+    layer.  When an :class:`ExperimentSpec` carries one, the runner (a)
+    samples a per-iteration node availability mask from the seeded
+    process below (consumed by the dropout-tolerant ``dif_partial`` /
+    ``dif_stale`` / ``dif_pushsum`` solvers — all ``T_con`` gossip
+    rounds of one outer iteration share the iteration's mask), and (b)
+    REPLACES the closed-form comm-model pricing with the event-driven
+    clock of :mod:`repro.core.system_clock`, so ``Trace.time_axis``
+    becomes measured simulated seconds.
+
+    Availability process (``availability``):
+
+      * ``"always"``    — every node live every iteration (the
+        degenerate anchor: trajectories must match dense gossip
+        bit-for-bit);
+      * ``"bernoulli"`` — node g is live at iteration τ iid with
+        probability ``p_on``;
+      * ``"markov"``    — 2-state on/off chain per node (start on):
+        P(on→off) = ``p_drop``, P(off→on) = ``p_return``.
+
+    Heterogeneous compute: per-node speed multipliers drawn once from
+    U[1, 1+``speed_spread``], plus a straggler tail — each (iteration,
+    node) compute independently slows by ``straggler_factor`` with
+    probability ``straggler_prob``.  ``latency_s``/``jitter_std_s``
+    override the CommSpec network model's link distribution when set
+    (``None`` keeps the model's own).  All draws derive from ``seed``
+    (masks and speeds) or the CommSpec seed (clock jitter), so the layer
+    is reproducible from the spec alone.
+    """
+    availability: str = "always"
+    p_on: float = 1.0
+    p_drop: float = 0.0
+    p_return: float = 1.0
+    speed_spread: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_factor: float = 1.0
+    latency_s: Optional[float] = None
+    jitter_std_s: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.availability not in AVAILABILITY_KINDS:
+            raise ValueError(f"unknown availability kind "
+                             f"{self.availability!r}; expected one of "
+                             f"{AVAILABILITY_KINDS}")
+        for field in ("p_on", "p_drop", "p_return", "straggler_prob"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{field} must be a probability in "
+                                 f"[0, 1], got {v}")
+        if self.speed_spread < 0:
+            raise ValueError(f"speed_spread must be >= 0, got "
+                             f"{self.speed_spread}")
+        if self.straggler_factor < 1:
+            raise ValueError(f"straggler_factor multiplies compute time "
+                             f"and must be >= 1, got "
+                             f"{self.straggler_factor}")
+        for field in ("latency_s", "jitter_std_s"):
+            v = getattr(self, field)
+            if v is not None and v < 0:
+                raise ValueError(f"{field} must be >= 0 (or None for the "
+                                 f"comm model's own), got {v}")
+
+    @property
+    def is_always_on(self) -> bool:
+        """True when the availability process can never drop a node —
+        the regime every solver (not just the dropout-tolerant three)
+        may run under."""
+        return (self.availability == "always"
+                or (self.availability == "bernoulli" and self.p_on == 1.0)
+                or (self.availability == "markov" and self.p_drop == 0.0))
+
+    def availability_mask(self, T_GD: int, L: int) -> np.ndarray:
+        """The seeded (T_GD, L) bool mask — True = node live.  Host
+        numpy, generated ONCE by the runner and fed identically to the
+        simulator scan and the mesh runtime (substrate determinism)."""
+        if self.is_always_on:
+            return np.ones((T_GD, L), dtype=bool)
+        rng = np.random.default_rng([self.seed, 0])
+        if self.availability == "bernoulli":
+            return rng.random((T_GD, L)) < self.p_on
+        mask = np.empty((T_GD, L), dtype=bool)
+        state = np.ones(L, dtype=bool)              # markov: start on
+        for t in range(T_GD):
+            u = rng.random(L)
+            state = np.where(state, u >= self.p_drop, u < self.p_return)
+            mask[t] = state
+        return mask
+
+    def node_speeds(self, L: int) -> np.ndarray:
+        """Per-node compute-time multipliers in [1, 1+speed_spread]."""
+        if self.speed_spread == 0:
+            return np.ones(L)
+        rng = np.random.default_rng([self.seed, 1])
+        return 1.0 + self.speed_spread * rng.random(L)
+
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
@@ -220,6 +335,7 @@ class ExperimentSpec:
     solver: SolverSpec = SolverSpec()
     engine: EngineSpec = EngineSpec()
     comm: CommSpec = CommSpec()
+    system: Optional[SystemSpec] = None
     substrate: str = "simulator"
     name: str = ""
 
@@ -256,7 +372,9 @@ def _from_dict(cls, data):
     kwargs = {}
     for key, value in data.items():
         sub = _SUBSPEC_TYPES.get((cls, key))
-        kwargs[key] = _from_dict(sub, value) if sub is not None else value
+        # optional sub-specs (system) round-trip None as None
+        kwargs[key] = (_from_dict(sub, value)
+                       if sub is not None and value is not None else value)
     return cls(**kwargs)
 
 
@@ -267,4 +385,5 @@ _SUBSPEC_TYPES = {
     (ExperimentSpec, "solver"): SolverSpec,
     (ExperimentSpec, "engine"): EngineSpec,
     (ExperimentSpec, "comm"): CommSpec,
+    (ExperimentSpec, "system"): SystemSpec,
 }

@@ -12,13 +12,16 @@ from repro.core.altgdmin import (
     dif_altgdmin, dec_altgdmin, centralized_altgdmin, dgd_altgdmin,
     exact_diffusion_altgdmin, beyond_central_altgdmin,
     dif_topk_altgdmin, dif_quantized_altgdmin, dif_event_altgdmin,
+    dif_partial_altgdmin, dif_stale_altgdmin, dif_pushsum_altgdmin,
     minimize_B, grad_U, RunResult, resolve_eta,
 )
 from repro.core.engine import AltgdminEngine, resolve_engine
 from repro.core import theory
 from repro.core import comm_model
+from repro.core import system_clock
 from repro.core.runtime import (
     dif_altgdmin_mesh, dec_altgdmin_mesh, dgd_altgdmin_mesh,
     centralized_altgdmin_mesh, exact_diffusion_mesh, beyond_central_mesh,
     dif_topk_mesh, dif_quantized_mesh, dif_event_mesh,
+    dif_partial_mesh, dif_stale_mesh, dif_pushsum_mesh,
 )

@@ -27,7 +27,15 @@ gossip with error feedback riding the scan carry):
 
   * ``dif_topk_altgdmin``      — ``topk_gossip`` (k rows per round);
   * ``dif_quantized_altgdmin`` — ``quantized_gossip`` (bf16/int8 wire);
-  * ``dif_event_altgdmin``     — ``event_gossip`` (threshold-triggered).
+  * ``dif_event_altgdmin``     — ``event_gossip`` (threshold-triggered);
+
+and the dropout-tolerant variants consuming a (T_GD, L) availability
+mask (system-realism layer; down nodes are frozen for the iteration):
+
+  * ``dif_partial_altgdmin`` — ``partial_gossip`` (masked weights);
+  * ``dif_stale_altgdmin``   — ``stale_gossip`` (last-delivered copies);
+  * ``dif_pushsum_altgdmin`` — ``push_sum_gossip`` (bias-corrected
+    ratio consensus for the directed masked topology).
 
 Simulator layout: node axis leading. U_nodes: (L, d, r); per-node data
 Xg: (L, tpn, n, d), yg: (L, tpn, n).  All loops are lax.scan so tracing
@@ -72,6 +80,10 @@ class RunResult(NamedTuple):
     sd_mean: jax.Array       # (T_GD,)
     spread: jax.Array        # (T_GD,) max_{g,g'} ||U_g − U_g'||_F
     eta: float
+    # (T_GD,) measured per-iteration send rate (event-triggered rule
+    # only; feeds the system clock's wire pricing).  Trailing default
+    # keeps the historical 6-positional constructors working.
+    send_frac: Optional[jax.Array] = None
 
 
 # ----------------------------------------------------------------------
@@ -318,6 +330,12 @@ def _compressed_dif(U0_nodes, Xg, yg, W, *, rule_name: str, eta: float,
     rule = get_rule(rule_name)
     mix = eng.make_state_mixer(W, T_con, rule=rule_name, **rule_kw)
     state0 = rule.init_state(U0_nodes, **rule_kw)
+    # Event rule: also record the measured trigger rate per iteration
+    # (first-round decision against the carried public copies — the
+    # same condition the rule's encode uses), the telemetry the system
+    # clock prices actual wire traffic with.
+    is_event = rule_name == "event_gossip"
+    threshold = float(rule_kw.get("event_threshold", 0.0))
 
     def step(carry, tau):
         U, cstate = carry
@@ -325,18 +343,30 @@ def _compressed_dif(U0_nodes, Xg, yg, W, *, rule_name: str, eta: float,
         Xc, yc = _select(Xg, yg, 2 * tau + 1)
         B, G = eng.min_grad(U, Xb, yb, Xc, yc, same_data=same_data)
         U_breve = U - (eta * L) * G              # local adapt
+        if is_event:
+            sf = rule.send_fraction(U_breve, cstate, threshold)
         U_tilde, cstate = mix(U_breve, cstate)   # compressed diffusion
         U_new, _ = _qr_pos(U_tilde)              # projection
-        return (U_new, cstate), _metrics(U_new, U_star_)
+        out = _metrics(U_new, U_star_)
+        if is_event:
+            out = out + (sf,)
+        return (U_new, cstate), out
 
-    (U_fin, _), (sd_max, sd_mean, spread) = jax.lax.scan(
+    (U_fin, _), outs = jax.lax.scan(
         step, (U0_nodes, state0), jnp.arange(T_GD))
+    sfrac = None
+    if is_event:
+        sd_max, sd_mean, spread, sfrac = outs
+    else:
+        sd_max, sd_mean, spread = outs
     B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 2 * (T_GD - 1)))
-    return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
+    return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta,
+                     send_frac=sfrac)
 
 
 def dif_topk_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
-                      T_con: int, compression_k: int = 0, U_star=None,
+                      T_con: int, compression_k: int = 0,
+                      consensus_gamma: float = 1.0, U_star=None,
                       engine: Optional[AltgdminEngine] = None,
                       backend: Optional[str] = None) -> RunResult:
     """Dif-AltGDmin over the ``topk_gossip`` rule: each gossip round
@@ -346,16 +376,21 @@ def dif_topk_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
     bit-identically on the exact (xla-ref / f64) path; fused backends
     agree to f32 round-off only, since dense gossip hoists the whole
     AGREE phase into one precomputed W^{T_con} combine while the
-    compressed rule must mix round by round."""
+    compressed rule must mix round by round.  ``consensus_gamma`` is
+    the CHOCO consensus step size: ``Z ← Z + γ(W x̂ − Z)`` relaxes the
+    gossip move toward the compressed average, stabilizing aggressive
+    sparsification (k ≪ d/4); γ = 1 is the plain combine, preserved
+    bit-for-bit."""
     return _compressed_dif(U0_nodes, Xg, yg, W, rule_name="topk_gossip",
                            eta=eta, T_GD=T_GD, T_con=T_con, U_star=U_star,
                            engine=engine, backend=backend,
-                           compression_k=compression_k)
+                           compression_k=compression_k,
+                           consensus_gamma=consensus_gamma)
 
 
 def dif_quantized_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
                            T_con: int, compression: Optional[str] = None,
-                           U_star=None,
+                           consensus_gamma: float = 1.0, U_star=None,
                            engine: Optional[AltgdminEngine] = None,
                            backend: Optional[str] = None) -> RunResult:
     """Dif-AltGDmin over the ``quantized_gossip`` rule: the wire carries
@@ -367,12 +402,13 @@ def dif_quantized_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
                            rule_name="quantized_gossip", eta=eta,
                            T_GD=T_GD, T_con=T_con, U_star=U_star,
                            engine=engine, backend=backend,
-                           compression=compression)
+                           compression=compression,
+                           consensus_gamma=consensus_gamma)
 
 
 def dif_event_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
                        T_con: int, event_threshold: float = 0.0,
-                       U_star=None,
+                       consensus_gamma: float = 1.0, U_star=None,
                        engine: Optional[AltgdminEngine] = None,
                        backend: Optional[str] = None) -> RunResult:
     """Dif-AltGDmin over the ``event_gossip`` rule: a node re-broadcasts
@@ -384,4 +420,109 @@ def dif_event_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
     return _compressed_dif(U0_nodes, Xg, yg, W, rule_name="event_gossip",
                            eta=eta, T_GD=T_GD, T_con=T_con, U_star=U_star,
                            engine=engine, backend=backend,
-                           event_threshold=event_threshold)
+                           event_threshold=event_threshold,
+                           consensus_gamma=consensus_gamma)
+
+
+# ----------------------------------------------------------------------
+# dropout-tolerant variants (availability-masked consensus rules)
+# ----------------------------------------------------------------------
+
+def _masked_dif(U0_nodes, Xg, yg, W, *, rule_name: str, eta: float,
+                T_GD: int, T_con: int, avail, U_star, engine,
+                backend) -> RunResult:
+    """Dif-AltGDmin (adapt-then-combine) under a per-iteration node
+    availability mask ``avail: (T_GD, L)`` (truthy = live).  Down nodes
+    are FULLY frozen for the iteration — no adapt, no combine, no
+    retraction — and the masked combine rule decides how the live nodes
+    mix around the hole (weight folding / stale copies / push-sum).
+    All T_con AGREE rounds of one iteration share its mask: node churn
+    is an outer-iteration phenomenon here.  ``avail=None`` (or all
+    ones) reproduces the dense drivers — bit-for-bit for
+    ``partial_gossip`` and ``stale_gossip``, to float round-off for
+    ``push_sum_gossip`` (its ratio correction is different arithmetic).
+    """
+    L = U0_nodes.shape[0]
+    U_star_ = U_star if U_star is not None else U0_nodes[0]
+    eng = resolve_engine(engine, backend)
+    same_data = Xg.ndim == 4
+    rule = get_rule(rule_name)
+    stateful = rule_name == "stale_gossip"
+    if avail is None:
+        avail = jnp.ones((T_GD, L), bool)
+    avail = jnp.asarray(avail).astype(bool)
+    if avail.shape != (T_GD, L):
+        raise ValueError(f"availability mask {avail.shape} does not "
+                         f"match (T_GD, L) = ({T_GD}, {L})")
+    if stateful:
+        mix = eng.make_masked_state_mixer(W, T_con, rule=rule_name)
+        state0 = rule.init_state(U0_nodes)
+    else:
+        mix = eng.make_masked_mixer(W, T_con, rule=rule_name)
+
+    def step(carry, xt):
+        tau, m = xt
+        U = carry[0] if stateful else carry
+        Xb, yb = _select(Xg, yg, 2 * tau)
+        Xc, yc = _select(Xg, yg, 2 * tau + 1)
+        B, G = eng.min_grad(U, Xb, yb, Xc, yc, same_data=same_data)
+        U_breve = U - (eta * L) * G              # local adapt
+        if stateful:
+            U_tilde, cstate = mix(U_breve, carry[1], m)
+        else:
+            U_tilde = mix(U_breve, m)
+        # down nodes are frozen for the whole iteration (a masked rule
+        # already returns their iterate unchanged through the combine,
+        # but the adapt/retraction must be undone too)
+        U_new = jnp.where(m[:, None, None], _qr_pos(U_tilde)[0], U)
+        out = _metrics(U_new, U_star_)
+        return ((U_new, cstate) if stateful else U_new), out
+
+    carry0 = (U0_nodes, state0) if stateful else U0_nodes
+    carry_fin, (sd_max, sd_mean, spread) = jax.lax.scan(
+        step, carry0, (jnp.arange(T_GD), avail))
+    U_fin = carry_fin[0] if stateful else carry_fin
+    B_fin = eng.minimize_B(U_fin, *_select(Xg, yg, 2 * (T_GD - 1)))
+    return RunResult(U_fin, B_fin, sd_max, sd_mean, spread, eta)
+
+
+def dif_partial_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                         T_con: int, avail=None, U_star=None,
+                         engine: Optional[AltgdminEngine] = None,
+                         backend: Optional[str] = None) -> RunResult:
+    """Dif-AltGDmin over ``partial_gossip``: per iteration, links with a
+    down endpoint carry no weight and the lost mass folds into the self
+    weight (the effective matrix stays doubly stochastic for symmetric
+    W).  ``avail`` all-ones reproduces ``dif_altgdmin`` bit-for-bit."""
+    return _masked_dif(U0_nodes, Xg, yg, W, rule_name="partial_gossip",
+                       eta=eta, T_GD=T_GD, T_con=T_con, avail=avail,
+                       U_star=U_star, engine=engine, backend=backend)
+
+
+def dif_stale_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                       T_con: int, avail=None, U_star=None,
+                       engine: Optional[AltgdminEngine] = None,
+                       backend: Optional[str] = None) -> RunResult:
+    """Dif-AltGDmin over ``stale_gossip``: every node's last-published
+    copy persists in the scan carry; live nodes combine dense weights
+    with a down neighbour's STALE copy instead of reweighting around
+    it.  ``avail`` all-ones reproduces ``dif_altgdmin`` bit-for-bit."""
+    return _masked_dif(U0_nodes, Xg, yg, W, rule_name="stale_gossip",
+                       eta=eta, T_GD=T_GD, T_con=T_con, avail=avail,
+                       U_star=U_star, engine=engine, backend=backend)
+
+
+def dif_pushsum_altgdmin(U0_nodes, Xg, yg, W, *, eta: float, T_GD: int,
+                         T_con: int, avail=None, U_star=None,
+                         engine: Optional[AltgdminEngine] = None,
+                         backend: Optional[str] = None) -> RunResult:
+    """Dif-AltGDmin over ``push_sum_gossip``: the masked mixing matrix
+    is column-stochastic (each live sender renormalizes its own column)
+    and a companion weight scalar carried through the same matrix
+    bias-corrects the readout z/w — exact averaging under the DIRECTED
+    effective topologies dropout induces.  ``avail`` all-ones matches
+    ``dif_altgdmin`` to float round-off (the ratio correction is
+    genuinely different arithmetic)."""
+    return _masked_dif(U0_nodes, Xg, yg, W, rule_name="push_sum_gossip",
+                       eta=eta, T_GD=T_GD, T_con=T_con, avail=avail,
+                       U_star=U_star, engine=engine, backend=backend)

@@ -59,10 +59,15 @@ def decentralized_time_axis(n_iters: int, T_con: int, d: int, r: int,
                             max_deg: int, compute_time_per_iter: float,
                             model: NetworkModel = ETHERNET_1GBPS,
                             seed: int = 0, *, n_entries: int | None = None,
-                            bytes_per_entry: int | None = None) -> np.ndarray:
+                            bytes_per_entry: int | None = None,
+                            rng: np.random.Generator | None = None
+                            ) -> np.ndarray:
     """Cumulative wall-clock after each outer iteration for a decentralized
-    run: per iteration, T_con gossip rounds + local compute."""
-    rng = np.random.default_rng(seed)
+    run: per iteration, T_con gossip rounds + local compute.  ``rng``
+    threads a caller-seeded generator (e.g. ``CommSpec.rng()``) through
+    every jitter draw; without one, ``seed`` builds it here — either way
+    the axis is reproducible."""
+    rng = np.random.default_rng(seed) if rng is None else rng
     per_iter = np.array([
         sum(agree_round_time(d, r, max_deg, model, rng, n_entries=n_entries,
                              bytes_per_entry=bytes_per_entry)
@@ -75,7 +80,9 @@ def decentralized_time_axis(n_iters: int, T_con: int, d: int, r: int,
 def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
                              max_deg: int, compute_s_per_iter: float,
                              model: NetworkModel = ETHERNET_1GBPS,
-                             seed: int = 0) -> np.ndarray:
+                             seed: int = 0, *,
+                             rng: np.random.Generator | None = None
+                             ) -> np.ndarray:
     """Price a solver's wall-clock axis from its CombineRule
     :class:`~repro.distributed.consensus.CommSignature`: ``"central"``
     is a gather + broadcast per iteration, ``"none"`` is compute only,
@@ -83,15 +90,17 @@ def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
     rounds with every neighbour.  The signature's payload fields
     (``entries_per_round``/``bytes_per_entry``) override the dense d×r
     exchange at the model's native precision, so compressed combine
-    rules price their actual wire format."""
+    rules price their actual wire format.  ``rng`` threads one seeded
+    generator through every jitter draw (``seed`` builds one
+    otherwise)."""
     if sig.pattern == "central":
         return centralized_time_axis(n_iters, d, r, L, compute_s_per_iter,
-                                     model=model, seed=seed)
+                                     model=model, seed=seed, rng=rng)
     if sig.pattern == "none" or sig.rounds_per_iter == 0:
         return np.cumsum(np.full(n_iters, compute_s_per_iter))
     return decentralized_time_axis(
         n_iters, sig.rounds_per_iter, d, r, max_deg, compute_s_per_iter,
-        model=model, seed=seed,
+        model=model, seed=seed, rng=rng,
         n_entries=getattr(sig, "entries_per_round", None),
         bytes_per_entry=getattr(sig, "bytes_per_entry", None))
 
@@ -99,10 +108,12 @@ def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
 def centralized_time_axis(n_iters: int, d: int, r: int, L: int,
                           compute_time_per_iter: float,
                           model: NetworkModel = ETHERNET_1GBPS,
-                          seed: int = 0) -> np.ndarray:
+                          seed: int = 0, *,
+                          rng: np.random.Generator | None = None
+                          ) -> np.ndarray:
     """Centralized AltGDmin: one gather of gradients (L parallel uploads) +
     one broadcast of U per iteration."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     per_iter = np.array([
         max(model.message_time(d * r, rng) for _ in range(L))     # gather
         + max(model.message_time(d * r, rng) for _ in range(L))   # broadcast

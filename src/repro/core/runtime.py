@@ -38,7 +38,14 @@ All six registered solvers share one shard_map skeleton
     payload crosses the wire by collective-permute, and the K+1
     decompressed blocks still merge in ONE fused ``gossip_combine``
     dispatch; the compression state (error-feedback residual /
-    last-sent iterate) rides the aux scan carry.
+    last-sent iterate) rides the aux scan carry;
+  * :func:`dif_partial_mesh` / :func:`dif_stale_mesh` /
+    :func:`dif_pushsum_mesh` — the dropout-tolerant variants: a
+    (T_GD, L) availability mask rides the scan ``xs`` replicated to
+    every device; down devices are frozen for the iteration and the
+    masked combine rules reroute weight (partial), substitute stale
+    copies (stale), or bias-correct with a push-sum weight carry
+    (pushsum).
 
 The min-B and gradient phases route through the same
 :class:`repro.core.engine.AltgdminEngine` as the simulator (``engine=``/
@@ -74,7 +81,7 @@ from repro.utils.compat import shard_map as _shard_map
 def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                    T_GD: int, make_update,
                    engine: AltgdminEngine | None,
-                   backend: str | None, U_star, init_aux=None):
+                   backend: str | None, U_star, init_aux=None, xs=None):
     """Shared shard_map skeleton for the decentralized mesh solvers.
 
     ``make_update(eng) -> update(U, aux, min_grad)`` builds the
@@ -87,6 +94,11 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
     metrics all-gather, the final min-B — is solver-independent.
     ``init_aux(U_local)`` seeds the auxiliary state from the device's
     starting iterate.
+
+    ``xs`` (optional) is a pytree of per-iteration scan inputs with a
+    leading T_GD axis, replicated to every device (the dropout solvers'
+    availability masks); when given, the update is called as
+    ``update(U, aux, min_grad, xt)`` with iteration τ's slice.
     """
     from repro.core.altgdmin import RunResult
 
@@ -97,6 +109,7 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
     eng = resolve_engine(engine, backend)
     update = make_update(eng)
     with_metrics = U_star is not None
+    has_xs = xs is not None
 
     def local_min_B(U, X, y):
         """b_t = (X_t U)† y_t for the device's tasks, through the engine
@@ -110,16 +123,19 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                             same_data=True)
         return B[0], G[0]
 
-    def body(U0, Xg, yg, U_star):
+    def body(U0, Xg, yg, U_star, *rest):
         U = U0[0]                       # this device's node
         X, y = Xg[0], yg[0]
 
         def mg(U_):
             return local_min_grad(U_, X, y)
 
-        def step(carry, _):
+        def step(carry, xt):
             U, aux = carry
-            U_new, aux_new = update(U, aux, mg)
+            if has_xs:
+                U_new, aux_new = update(U, aux, mg, xt)
+            else:
+                U_new, aux_new = update(U, aux, mg)
             if not with_metrics:
                 return (U_new, aux_new), None
             U_all = jax.lax.all_gather(U_new, axis_name)     # (L, d, r)
@@ -127,8 +143,9 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                                       consensus_spread(U_all))
 
         aux0 = init_aux(U) if init_aux is not None else None
-        (U_fin, _), metrics = jax.lax.scan(step, (U, aux0), None,
-                                           length=T_GD)
+        xseq = rest[0] if has_xs else None
+        (U_fin, _), metrics = jax.lax.scan(
+            step, (U, aux0), xseq, length=None if has_xs else T_GD)
         B_fin = local_min_B(U_fin, X, y)
         if not with_metrics:
             return U_fin[None], B_fin[None]
@@ -138,13 +155,14 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
     sharded = P(axis_name)
     out_specs = ((sharded,) * 4) if with_metrics else (sharded, sharded)
     run = _shard_map(body, mesh=mesh,
-                     in_specs=(sharded, sharded, sharded, P()),
+                     in_specs=(sharded, sharded, sharded, P())
+                     + ((P(),) if has_xs else ()),
                      out_specs=out_specs,
                      axis_names={axis_name},
                      check_rep=not eng.fused)
 
     U_dummy = U0[0] if U_star is None else U_star
-    out = run(U0, Xg, yg, U_dummy)
+    out = run(U0, Xg, yg, U_dummy, *((xs,) if has_xs else ()))
     if not with_metrics:
         return out
     U_fin, B_fin, sd, spread = out          # sd/spread: (L, T_GD)
@@ -381,6 +399,7 @@ def _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name: str, *,
 
 def dif_topk_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                   T_GD: int, T_con: int, compression_k: int = 0,
+                  consensus_gamma: float = 1.0,
                   shifts=(-1, 1), self_weight=None, W=None,
                   engine: AltgdminEngine | None = None,
                   backend: str | None = None, U_star=None):
@@ -393,11 +412,13 @@ def dif_topk_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                                 T_GD=T_GD, T_con=T_con, shifts=shifts,
                                 self_weight=self_weight, W=W, engine=engine,
                                 backend=backend, U_star=U_star,
-                                compression_k=compression_k)
+                                compression_k=compression_k,
+                                consensus_gamma=consensus_gamma)
 
 
 def dif_quantized_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                        T_GD: int, T_con: int, compression: str | None = None,
+                       consensus_gamma: float = 1.0,
                        shifts=(-1, 1), self_weight=None, W=None,
                        engine: AltgdminEngine | None = None,
                        backend: str | None = None, U_star=None):
@@ -411,11 +432,13 @@ def dif_quantized_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                                 T_GD=T_GD, T_con=T_con, shifts=shifts,
                                 self_weight=self_weight, W=W, engine=engine,
                                 backend=backend, U_star=U_star,
-                                compression=compression)
+                                compression=compression,
+                                consensus_gamma=consensus_gamma)
 
 
 def dif_event_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                    T_GD: int, T_con: int, event_threshold: float = 0.0,
+                   consensus_gamma: float = 1.0,
                    shifts=(-1, 1), self_weight=None, W=None,
                    engine: AltgdminEngine | None = None,
                    backend: str | None = None, U_star=None):
@@ -429,4 +452,114 @@ def dif_event_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                                 T_GD=T_GD, T_con=T_con, shifts=shifts,
                                 self_weight=self_weight, W=W, engine=engine,
                                 backend=backend, U_star=U_star,
-                                event_threshold=event_threshold)
+                                event_threshold=event_threshold,
+                                consensus_gamma=consensus_gamma)
+
+
+# ----------------------------------------------------------------------
+# dropout-tolerant variants (availability-masked consensus rules)
+# ----------------------------------------------------------------------
+
+def _masked_dif_mesh(U0, Xg, yg, mesh, axis_name: str, *, rule_name: str,
+                     eta: float, T_GD: int, T_con: int, avail=None,
+                     shifts=(-1, 1), self_weight=None, W=None,
+                     engine: AltgdminEngine | None = None,
+                     backend: str | None = None, U_star=None):
+    """Adapt-then-combine under a per-iteration availability mask
+    ``avail: (T_GD, L)`` (truthy = live), replicated to every device and
+    riding the skeleton's scan ``xs``.  Down devices still execute the
+    SPMD program (a static schedule cannot elide a step) but their
+    iterate is frozen for the iteration and the masked combine rule
+    routes weight/stale-copies/push-sum mass around them — the simulated
+    system clock prices the time they actually save.  ``avail=None``
+    reproduces the dense mesh solver (bit-for-bit for ``partial_gossip``
+    / ``stale_gossip``)."""
+    L = mesh.shape[axis_name]
+    eta_L = eta * L
+    rule = get_rule(rule_name)
+    stateful = rule_name == "stale_gossip"
+    if avail is None:
+        avail = jnp.ones((T_GD, L), bool)
+    avail = jnp.asarray(avail).astype(bool)
+    if avail.shape != (T_GD, L):
+        raise ValueError(f"availability mask {avail.shape} does not "
+                         f"match (T_GD, L) = ({T_GD}, {L})")
+
+    def make_update(eng):
+        if stateful:
+            mix = rule.make_mesh_masked_state_mixer(
+                axis_name, L, T_con, shifts, self_weight, W=W,
+                backend=eng.backend)
+        else:
+            mix = rule.make_mesh_masked_mixer(
+                axis_name, L, T_con, shifts, self_weight, W=W,
+                backend=eng.backend)
+
+        def update(U, aux, mg, m):
+            g = jax.lax.axis_index(axis_name)
+            _, G = mg(U)
+            U_breve = U - eta_L * G                  # local adapt
+            if stateful:
+                U_tilde, aux = mix(U_breve, aux, m)
+            else:
+                U_tilde = mix(U_breve, m)
+            # down this iteration: frozen (no adapt/combine/retraction)
+            U_new = jnp.where(m[g], _qr_pos(U_tilde)[0], U)
+            return U_new, aux
+        return update
+
+    init_aux = (lambda U: rule.init_mesh_state(U)) if stateful else None
+    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
+                          make_update=make_update, engine=engine,
+                          backend=backend, U_star=U_star,
+                          init_aux=init_aux, xs=avail)
+
+
+def dif_partial_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                     T_GD: int, T_con: int, avail=None,
+                     shifts=(-1, 1), self_weight=None, W=None,
+                     engine: AltgdminEngine | None = None,
+                     backend: str | None = None, U_star=None):
+    """``dif_partial`` on the mesh: per gossip round each device zeroes
+    the weights of links with a down endpoint and folds the lost mass
+    into its self weight (its row of the masked mixing matrix).  Full
+    availability reproduces :func:`dif_altgdmin_mesh` bit-for-bit."""
+    return _masked_dif_mesh(U0, Xg, yg, mesh, axis_name,
+                            rule_name="partial_gossip", eta=eta,
+                            T_GD=T_GD, T_con=T_con, avail=avail,
+                            shifts=shifts, self_weight=self_weight, W=W,
+                            engine=engine, backend=backend, U_star=U_star)
+
+
+def dif_stale_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                   T_GD: int, T_con: int, avail=None,
+                   shifts=(-1, 1), self_weight=None, W=None,
+                   engine: AltgdminEngine | None = None,
+                   backend: str | None = None, U_star=None):
+    """``dif_stale`` on the mesh: each device's last-published copy
+    rides the aux scan carry (ONE extra d×r buffer); a down neighbour's
+    permuted payload is its stale copy, combined with the DENSE weights.
+    Full availability reproduces :func:`dif_altgdmin_mesh`
+    bit-for-bit."""
+    return _masked_dif_mesh(U0, Xg, yg, mesh, axis_name,
+                            rule_name="stale_gossip", eta=eta,
+                            T_GD=T_GD, T_con=T_con, avail=avail,
+                            shifts=shifts, self_weight=self_weight, W=W,
+                            engine=engine, backend=backend, U_star=U_star)
+
+
+def dif_pushsum_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
+                     T_GD: int, T_con: int, avail=None,
+                     shifts=(-1, 1), self_weight=None, W=None,
+                     engine: AltgdminEngine | None = None,
+                     backend: str | None = None, U_star=None):
+    """``dif_pushsum`` on the mesh: each live device renormalizes its
+    own column of the masked matrix (requires symmetric W — validated),
+    pre-scales its (iterate, weight-scalar) payload, and the readout
+    z/w bias-corrects the directed masked topology.  Full availability
+    matches :func:`dif_altgdmin_mesh` to float round-off."""
+    return _masked_dif_mesh(U0, Xg, yg, mesh, axis_name,
+                            rule_name="push_sum_gossip", eta=eta,
+                            T_GD=T_GD, T_con=T_con, avail=avail,
+                            shifts=shifts, self_weight=self_weight, W=W,
+                            engine=engine, backend=backend, U_star=U_star)

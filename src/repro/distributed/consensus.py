@@ -40,7 +40,13 @@ Diffusion for Decentralized Multitask Learning*, arXiv:2304.07358) and
 *Beyond Centralization*, arXiv:2512.22675) — and the compressed wire
 rules ``topk_gossip`` / ``quantized_gossip`` / ``event_gossip`` (see
 :class:`CompressedGossipCombine`: stateful encode, compact payloads,
-error feedback).  ``register_rule`` is open.
+error feedback).  The dropout-tolerant rules ``partial_gossip`` /
+``stale_gossip`` / ``push_sum_gossip`` (see
+:class:`MaskedGossipCombine`) take a per-iteration availability mask:
+masked weight renormalization, last-delivered stale copies, and
+bias-corrected push-sum weight carry respectively — with availability
+≡ 1 the first two reproduce dense gossip bit-for-bit.
+``register_rule`` is open.
 """
 from __future__ import annotations
 
@@ -595,7 +601,12 @@ class CompressedGossipCombine(GossipCombine):
                              backend: str = "xla-ref", **kw) -> Callable:
         """Simulator closure ``(Z (L, d, r), state) ↦ (Z', state')``:
         T_con rounds of refresh + dense combine on the public copies +
-        exact-self correction."""
+        exact-self correction.  ``consensus_gamma`` (CHOCO step size,
+        default 1) relaxes each round toward the combined value,
+        ``Z ← Z + γ(combined − Z)`` — the damping that keeps aggressive
+        compression (k ≪ d/4) stable; γ = 1 is a Python-level no-op so
+        default trajectories stay bit-identical."""
+        gamma = float(kw.pop("consensus_gamma", 1.0))
         if T_con == 0:
             return lambda Z, state: (Z, state)
 
@@ -622,6 +633,8 @@ class CompressedGossipCombine(GossipCombine):
                 # makes Zc − xhat2 exactly zero, so the round stays the
                 # dense W @ Z product bit-for-bit.
                 Z2 = Z2 + w_diag * (Zc - xhat2)
+                if gamma != 1.0:
+                    Z2 = Zc + gamma * (Z2 - Zc)      # CHOCO relaxation
                 st2 = ((xhat2, count + 1) if self._stochastic(**kw)
                        else xhat2)
                 return (Z2, st2), None
@@ -641,7 +654,10 @@ class CompressedGossipCombine(GossipCombine):
         per round the COMPACT payload is exchanged by collective-permute
         (one per distinct cyclic shift), applied to the stored neighbour
         copies, and the K+1 blocks — exact self + refreshed copies —
-        merge in ONE fused ``gossip_combine`` dispatch."""
+        merge in ONE fused ``gossip_combine`` dispatch.
+        ``consensus_gamma``: the CHOCO relaxation, as on the simulator
+        lowering (γ = 1 → bit-identical no-op)."""
+        gamma = float(kw.pop("consensus_gamma", 1.0))
         shifts_, weights = self._mesh_weights(L, shifts, self_weight, W)
         if T_con == 0:
             return lambda z, state: (z, state)
@@ -673,6 +689,8 @@ class CompressedGossipCombine(GossipCombine):
                 # exact, neighbours as their refreshed public copies
                 z2 = combine_blocks(zc, [n[0] for n in nbrs2], w,
                                     backend=backend)
+                if gamma != 1.0:
+                    z2 = zc + gamma * (z2 - zc)      # CHOCO relaxation
                 nbr2 = (jnp.stack(nbrs2) if nbrs2
                         else jnp.zeros_like(nbr_copies))
                 st2 = ((own2, nbr2, count + 1)
@@ -872,6 +890,385 @@ class EventGossipCombine(CompressedGossipCombine):
         return CommSignature("gossip", T_con)
 
 # ----------------------------------------------------------------------
+# dropout-tolerant rules (availability-masked gossip)
+# ----------------------------------------------------------------------
+
+def masked_mixing_matrix(W, mask):
+    """Per-round effective mixing matrix under a participation mask
+    ``mask: (L,)`` (truthy = live).  A link is live iff BOTH endpoints
+    are; a dead link's weight folds back into the SELF weight (mass
+    redistribution over the live neighbourhood rather than row division),
+    which (a) keeps W(m) doubly stochastic whenever W is — so partial
+    gossip stays an unbiased averaging operator in expectation — and
+    (b) makes the full mask return W bit-for-bit (multiply by exact
+    ones, add exact zeros): the degenerate regression anchor.  A fully
+    isolated down node's row degenerates to ``e_g`` (its lost weight is
+    its whole off-diagonal mass), freezing its iterate."""
+    m = mask.astype(W.dtype)
+    eye = jnp.eye(W.shape[0], dtype=W.dtype)
+    keep = m[:, None] * m[None, :] * (1.0 - eye) + eye   # self link stays
+    lost = jnp.sum(W * (1.0 - keep), axis=1)
+    return W * keep + jnp.diag(lost)
+
+
+def push_sum_matrix(W, mask):
+    """Column-stochastic masked mixing matrix for push-sum: live sender
+    j distributes its mass over its LIVE out-neighbours + itself, each
+    column renormalized by its live mass ``c_j = W_jj + Σ_{i≠j} m_i m_j
+    W_ij`` — exactly column-stochastic by construction, whatever the
+    mask does to the graph (the directed, non-doubly-stochastic regime
+    push-sum's weight carry corrects)."""
+    m = mask.astype(W.dtype)
+    eye = jnp.eye(W.shape[0], dtype=W.dtype)
+    keep = m[:, None] * m[None, :] * (1.0 - eye) + eye
+    Wm = W * keep
+    c = jnp.sum(Wm, axis=0)                              # live column mass
+    return Wm / jnp.where(c > 0, c, 1.0)[None, :]
+
+
+class MaskedGossipCombine(GossipCombine):
+    """Base of the dropout-tolerant gossip rules: per-iteration
+    availability masks enter the combine, so the stateless
+    ``make_sim_mixer``/``make_mesh_mixer`` entry points are forbidden
+    (they would silently drop the mask) — drivers use the
+    ``*_masked_*`` forms and pass the (L,) mask of the CURRENT outer
+    iteration (all T_con rounds of one iteration share it; node churn
+    is an outer-iteration phenomenon, not a per-round one)."""
+
+    def make_sim_mixer(self, W, T_con, *, backend="xla-ref"):
+        raise TypeError(f"combine rule {self.name!r} is availability-"
+                        f"masked; use make_sim_masked_mixer")
+
+    def make_mesh_mixer(self, axis_name, L, T_con, shifts=(-1, 1),
+                        self_weight=None, *, W=None, backend="xla-ref"):
+        raise TypeError(f"combine rule {self.name!r} is availability-"
+                        f"masked; use make_mesh_masked_mixer")
+
+    def signature(self, T_con: int, **params) -> CommSignature:
+        # static pricing cannot see the mask: full-participation worst
+        # case (the event-driven clock measures the real cost)
+        return CommSignature("gossip", T_con)
+
+    # ---------------------------------------------------- mesh shared
+
+    @staticmethod
+    def _mask_keep(m, g, shifts_, L, dtype):
+        """Per-device liveness of each shift link: keep_k = m_g ·
+        m_{(g+s_k) mod L}."""
+        mf = m.astype(dtype)
+        return jnp.stack([mf[g] * mf[(g + s) % L] for s in shifts_])
+
+    @classmethod
+    def _masked_mesh_round(cls, z, m, axis_name, L, shifts_, weights,
+                           backend):
+        """One masked gossip round on hardware: the dense
+        :meth:`_mesh_round` permutes, but the (K+1,) combine weights are
+        re-derived from the mask — dead links zeroed, their weight
+        folded into the self weight (the row of
+        :func:`masked_mixing_matrix` this device owns).  Full mask:
+        ``w·1`` and ``w₀+0`` keep the dense weights bit-for-bit."""
+        g = jax.lax.axis_index(axis_name)
+        w = jnp.asarray(weights if isinstance(weights, tuple)
+                        else weights[g])
+        keep = cls._mask_keep(m, g, shifts_, L, w.dtype)
+        w_eff = jnp.concatenate([
+            (w[0] + jnp.sum(w[1:] * (1.0 - keep)))[None],
+            w[1:] * keep])
+        nbrs = []
+        for s in shifts_:
+            perm = [(i, (i - s) % L) for i in range(L)]
+            nbrs.append(jax.lax.ppermute(z, axis_name, perm))
+        return combine_blocks(z, nbrs, w_eff, backend=backend)
+
+
+class PartialGossipCombine(MaskedGossipCombine):
+    """``partial_gossip`` — per-round participation masking: only links
+    whose BOTH endpoints are live carry weight, the dead weight folds
+    into the self weight (see :func:`masked_mixing_matrix`), and down
+    nodes' rows collapse toward identity (the driver freezes their
+    iterate anyway).  With availability ≡ 1 the effective matrix IS W
+    bit-for-bit, so trajectories reproduce dense ``dif_altgdmin``
+    exactly — the regression anchor of the fault layer."""
+
+    name = "partial_gossip"
+
+    def make_sim_masked_mixer(self, W, T_con: int, *,
+                              backend: str = "xla-ref") -> Callable:
+        """Simulator closure ``(Z (L, ...), m (L,)) ↦ Z'``.  The masked
+        matrix is data-dependent, so fused backends mix round by round
+        (no ``W^{T_con}`` hoist); the exact path repeats
+        ``stacked_product``'s flattened matmul arithmetic so the full
+        mask is bit-identical to dense gossip."""
+        if T_con == 0:
+            return lambda Z, m: Z
+
+        def mix(Z, m):
+            Wd = jnp.asarray(W).astype(Z.dtype)
+            Weff = masked_mixing_matrix(Wd, m)
+            if _fused_wanted(backend, Z.dtype):
+                def round_(carry, _):
+                    return stacked_dense_mix(carry, Weff,
+                                             backend=backend), None
+                out, _ = jax.lax.scan(round_, Z, None, length=T_con)
+                return out
+            flat = Z.reshape(Z.shape[0], -1)
+
+            def round_(carry, _):
+                return Weff @ carry, None
+            out, _ = jax.lax.scan(round_, flat, None, length=T_con)
+            return out.reshape(Z.shape)
+        return mix
+
+    def make_mesh_masked_mixer(self, axis_name: str, L: int, T_con: int,
+                               shifts: Sequence[int] = (-1, 1),
+                               self_weight: float | None = None, *,
+                               W=None, backend: str = "xla-ref") -> Callable:
+        """Per-device closure ``(z (d, r), m (L,)) ↦ z'`` — the masked
+        ppermute round T_con times (the mask rides the scan xs of the
+        shared mesh skeleton, replicated on every device)."""
+        shifts_, weights = self._mesh_weights(L, shifts, self_weight, W)
+        if T_con == 0:
+            return lambda z, m: z
+
+        def mix(z, m):
+            def round_(carry, _):
+                return self._masked_mesh_round(carry, m, axis_name, L,
+                                               shifts_, weights,
+                                               backend), None
+            out, _ = jax.lax.scan(round_, z, None, length=T_con)
+            return out
+        return mix
+
+
+class StaleGossipCombine(MaskedGossipCombine):
+    """``stale_gossip`` — dropout tolerance on the
+    :class:`CompressedGossipCombine` reference-copy machinery: every
+    node's PUBLIC COPY x̂ persists across iterations (the state rides
+    the drivers' scan carry); a LIVE node re-publishes its iterate each
+    round (x̂ ← Z), a DOWN node sends nothing new — its last-delivered
+    copy sits in the neighbours' receive queue and mixes in ONCE, in
+    the iteration's first AGREE round (the late arrival lands at its
+    stale value instead of tearing a hole in the weights).  Rounds
+    2..T_con have no fresh packet from a down node to deliver, so the
+    down link's weight folds to the receiver's diagonal exactly like
+    ``partial_gossip`` — re-mixing the same stale anchor every round
+    would compound its weight and halve the contraction rate.  Down
+    nodes neither combine (the driver freezes them).  Full mask: every
+    copy refreshes to Z, the fold is a no-op, and every round IS dense
+    ``W @ Z`` bit-for-bit (the exact-self term never crosses a wire,
+    and a live refresh makes the copy exact)."""
+
+    name = "stale_gossip"
+
+    # ------------------------------------------------------- state
+
+    def init_state(self, Z_nodes, **kw):
+        """Stacked public copies x̂ (L, d, r), zero — the network starts
+        with no beliefs, exactly like the compressed rules (no setup
+        exchange)."""
+        return jnp.zeros_like(Z_nodes)
+
+    def init_mesh_state(self, z_local, n_shifts: int = 0, **kw):
+        """Per-device state: this device's own public copy (1, d, r).
+        Unlike the compressed rules no neighbour-copy buffers are
+        needed — a round's payload IS the sender's current copy, so
+        receivers never hold a fresher belief than what arrives."""
+        return jnp.zeros_like(z_local[None])
+
+    # --------------------------------------------------- lowerings
+
+    def make_sim_masked_state_mixer(self, W, T_con: int, *,
+                                    backend: str = "xla-ref",
+                                    **kw) -> Callable:
+        """Simulator closure ``(Z, x̂, m) ↦ (Z', x̂')``."""
+        if T_con == 0:
+            return lambda Z, state, m: (Z, state)
+
+        def mix(Z, state, m):
+            N = Z.shape[0]
+            Wd = jnp.asarray(W).astype(Z.dtype)
+            Weff = masked_mixing_matrix(Wd, m.astype(Wd.dtype))
+            mrow = m.astype(bool)[:, None, None]
+
+            def round_(carry, rd):
+                Zc, xhat = carry
+                xhat2 = jnp.where(mrow, Zc, xhat)    # live nodes publish
+                # the queued stale packet delivers once (round 0, dense
+                # W); later rounds fold the dead link to the diagonal
+                Wr = jnp.where(rd == 0, Wd, Weff)
+                if _fused_wanted(backend, Zc.dtype):
+                    Z2 = stacked_dense_mix(xhat2, Wr, backend=backend)
+                else:
+                    Z2 = (Wr @ xhat2.reshape(N, -1)).reshape(Zc.shape)
+                # live g's own copy is exact (x̂₂_g = Z_g), so no self
+                # correction is needed; down nodes freeze outright
+                Z2 = jnp.where(mrow, Z2, Zc)
+                return (Z2, xhat2), None
+
+            (Zf, xf), _ = jax.lax.scan(round_, (Z, state),
+                                       jnp.arange(T_con))
+            return Zf, xf
+        return mix
+
+    def make_mesh_masked_state_mixer(self, axis_name: str, L: int,
+                                     T_con: int,
+                                     shifts: Sequence[int] = (-1, 1),
+                                     self_weight: float | None = None, *,
+                                     W=None, backend: str = "xla-ref",
+                                     **kw) -> Callable:
+        """Per-device closure ``(z, x̂_own, m) ↦ (z', x̂_own')``: in the
+        FIRST round a live device publishes z into its copy, every
+        device permutes its copy (a down sender's wire carries its
+        queued last-published value), and live devices combine
+        self-exact with the K delivered copies under the DENSE weights;
+        later rounds have nothing new from down senders, so their link
+        weight folds to the receiver's diagonal (``partial_gossip``
+        style) instead of re-mixing the same stale packet."""
+        shifts_, weights = self._mesh_weights(L, shifts, self_weight, W)
+        if T_con == 0:
+            return lambda z, state, m: (z, state)
+
+        cls = type(self)
+
+        def mix(z, state, m):
+            g = jax.lax.axis_index(axis_name)
+            w = (weights if isinstance(weights, tuple) else weights[g])
+            w_arr = jnp.asarray(w, dtype=z.dtype)
+            keep = cls._mask_keep(m, g, shifts_, L, z.dtype)
+            w_fold = jnp.concatenate(
+                [(w_arr[0] + jnp.sum(w_arr[1:] * (1.0 - keep)))[None],
+                 w_arr[1:] * keep])
+            live = m.astype(bool)[g]
+
+            def round_(carry, rd):
+                zc, own = carry
+                own2 = jnp.where(live, zc[None], own)   # publish if live
+                nbrs = []
+                for s in shifts_:
+                    perm = [(i, (i - s) % L) for i in range(L)]
+                    nbrs.append(jax.lax.ppermute(own2, axis_name, perm))
+                # queued stale packet mixes once (round 0, dense w);
+                # afterwards the dead link's weight folds to self
+                w_rd = jnp.where(rd == 0, w_arr, w_fold)
+                z2 = combine_blocks(zc, [n[0] for n in nbrs], w_rd,
+                                    backend=backend)
+                z2 = jnp.where(live, z2, zc)            # down: freeze
+                return (z2, own2), None
+
+            (zf, of), _ = jax.lax.scan(round_, (z, state),
+                                       jnp.arange(T_con))
+            return zf, of
+        return mix
+
+
+class PushSumGossipCombine(MaskedGossipCombine):
+    """``push_sum_gossip`` — ratio-consensus for the DIRECTED mixing
+    matrices dropout induces: the masked matrix
+    (:func:`push_sum_matrix`) is only column-stochastic, so plain
+    gossip would drift toward a weighted (biased) average; push-sum
+    carries a companion weight scalar w through the same matrix
+    (z ← Cz, w ← Cw, w₀ = 1) and reads out the bias-corrected ratio
+    z/w after the T_con rounds.  The weight vector stays a probability
+    vector up to scale (Σ_g w_g = L — columns sum to one), the
+    invariant the tests pin.  The weight resets to 1 each outer
+    iteration (each AGREE phase is its own push-sum episode), so no
+    cross-iteration state is carried.  Full mask on a doubly stochastic
+    W: C ≈ W and w ≈ 1 up to the row sums' float round-off — the
+    degenerate case matches dense gossip to machine precision (not
+    bit-for-bit: the ratio correction is genuinely different
+    arithmetic)."""
+
+    name = "push_sum_gossip"
+
+    def make_sim_masked_mixer(self, W, T_con: int, *,
+                              backend: str = "xla-ref") -> Callable:
+        if T_con == 0:
+            return lambda Z, m: Z
+
+        def mix(Z, m):
+            N = Z.shape[0]
+            Wd = jnp.asarray(W).astype(Z.dtype)
+            C = push_sum_matrix(Wd, m)
+            flat = Z.reshape(N, -1)
+            w0 = jnp.ones((N, 1), Z.dtype)
+
+            def round_(carry, _):
+                zf, wv = carry
+                if _fused_wanted(backend, Z.dtype):
+                    zf = stacked_dense_mix(zf, C, backend=backend)
+                    wv = stacked_dense_mix(wv, C, backend=backend)
+                else:
+                    zf, wv = C @ zf, C @ wv
+                return (zf, wv), None
+
+            (zf, wv), _ = jax.lax.scan(round_, (flat, w0), None,
+                                       length=T_con)
+            out = zf / jnp.where(wv > 0, wv, 1.0)    # bias correction
+            return out.reshape(Z.shape)
+        return mix
+
+    def make_mesh_masked_mixer(self, axis_name: str, L: int, T_con: int,
+                               shifts: Sequence[int] = (-1, 1),
+                               self_weight: float | None = None, *,
+                               W=None, backend: str = "xla-ref") -> Callable:
+        """Per-device push-sum round: the sender normalizes its OWN
+        column locally (w_eff over its live links — exact because W must
+        be symmetric, validated below, so its row IS its column),
+        pre-scales the payload (z/c, w/c), and receivers combine with
+        their masked row weights.  Requires a symmetric mixing matrix;
+        asymmetric topologies need a sender-side column exchange the
+        mesh lowering does not implement."""
+        if W is not None:
+            Wn = np.asarray(W)
+            if not np.allclose(Wn, Wn.T):
+                raise ValueError(
+                    "push_sum_gossip's mesh lowering computes each "
+                    "sender's column normalizer from its own row, which "
+                    "requires a symmetric mixing matrix")
+        elif set(shifts) != {-s for s in shifts}:
+            raise ValueError(
+                f"push_sum_gossip's mesh lowering needs symmetric "
+                f"circulant shifts (closed under negation), got "
+                f"{tuple(shifts)}")
+        shifts_, weights = self._mesh_weights(L, shifts, self_weight, W)
+        if T_con == 0:
+            return lambda z, m: z
+
+        def mix(z, m):
+            g = jax.lax.axis_index(axis_name)
+            w = jnp.asarray(weights if isinstance(weights, tuple)
+                            else weights[g])
+            keep = self._mask_keep(m, g, shifts_, L, w.dtype)
+            # own column's live mass (symmetric W: row slice = column)
+            c = w[0] + jnp.sum(w[1:] * keep)
+            c = jnp.where(c > 0, c, 1.0)
+            w_eff = jnp.concatenate([w[:1], w[1:] * keep])
+            wv0 = jnp.ones((), z.dtype)
+
+            def round_(carry, _):
+                zc, wv = carry
+                zs = zc / c.astype(zc.dtype)         # pre-scaled payload
+                ws = wv / c.astype(zc.dtype)
+                nbrs_z, nbrs_w = [], []
+                for s in shifts_:
+                    perm = [(i, (i - s) % L) for i in range(L)]
+                    nbrs_z.append(jax.lax.ppermute(zs, axis_name, perm))
+                    nbrs_w.append(jax.lax.ppermute(ws, axis_name, perm))
+                z2 = combine_blocks(zs, nbrs_z, w_eff, backend=backend)
+                acc_dt = _acc_dtype(zc.dtype)
+                w2 = w_eff.astype(acc_dt)[0] * ws.astype(acc_dt)
+                for k, nw in enumerate(nbrs_w):
+                    w2 = w2 + w_eff.astype(acc_dt)[k + 1] \
+                        * nw.astype(acc_dt)
+                return (z2, w2.astype(zc.dtype)), None
+
+            (zf, wv), _ = jax.lax.scan(round_, (z, wv0), None,
+                                       length=T_con)
+            return zf / jnp.where(wv > 0, wv, 1.0)
+        return mix
+
+
+# ----------------------------------------------------------------------
 # registry
 # ----------------------------------------------------------------------
 
@@ -900,5 +1297,6 @@ def rule_names() -> tuple[str, ...]:
 for _rule in (GossipCombine(), NeighborCombine(), CentralCombine(),
               NoCombine(), ExactDiffusionCombine(), BeyondCentralCombine(),
               TopkGossipCombine(), QuantizedGossipCombine(),
-              EventGossipCombine()):
+              EventGossipCombine(), PartialGossipCombine(),
+              StaleGossipCombine(), PushSumGossipCombine()):
     register_rule(_rule)

@@ -530,3 +530,79 @@ def test_compressed_combine_single_dispatch_per_round():
                        timeout=1200)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
     assert "OK compressed-combine" in r.stdout
+
+
+# ------------------------- dropout-tolerant consensus rules (PR 6)
+
+SYSTEM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import sys
+    sys.path.insert(0, "src")
+    import dataclasses
+    import numpy as np
+    from repro.api import (ExperimentSpec, ProblemSpec, TopologySpec,
+                           InitSpec, SolverSpec, SystemSpec,
+                           run_experiment)
+
+    solver = sys.argv[1]
+    spec = ExperimentSpec(
+        problem=ProblemSpec(d=48, T=32, r=3, n=25, L=8, kappa=1.5),
+        topology=TopologySpec(family="erdos_renyi", p=0.45, seed=2,
+                              weights="metropolis"),
+        init=InitSpec(T_pm=15, T_con=6),
+        solver=SolverSpec(name=solver, T_GD=25, T_con=2),
+        system=SystemSpec(availability="bernoulli", p_on=0.7, seed=7))
+
+    # degenerate anchor: an always-on SystemSpec on the MESH substrate
+    # reproduces the dense mesh run bit-for-bit (partial/stale)
+    dense = run_experiment(dataclasses.replace(
+        spec, solver=dataclasses.replace(spec.solver,
+                                         name="dif_altgdmin"),
+        system=None, substrate="mesh"), key=0)
+    anchor = run_experiment(dataclasses.replace(
+        spec, system=SystemSpec(), substrate="mesh"), key=0,
+        materialized=dense.materialized)
+    if solver in ("dif_partial", "dif_stale"):
+        assert np.array_equal(np.asarray(anchor.U_nodes),
+                              np.asarray(dense.U_nodes)), "anchor drift"
+        np.testing.assert_array_equal(anchor.sd_max, dense.sd_max)
+    else:
+        np.testing.assert_allclose(anchor.sd_max, dense.sd_max,
+                                   rtol=1e-8, atol=1e-10)
+
+    # faulted run: one seeded 30%-dropout schedule, both substrates
+    sim = run_experiment(spec, key=0, materialized=dense.materialized)
+    hw = run_experiment(dataclasses.replace(spec, substrate="mesh"),
+                        key=0, materialized=dense.materialized)
+    drift = float(np.max(np.abs(np.asarray(hw.U_nodes)
+                                - np.asarray(sim.U_nodes))))
+    assert drift <= 2e-6, f"U drift {drift} for {solver}"
+    np.testing.assert_allclose(hw.sd_max, sim.sd_max, atol=2e-6)
+    for t in (sim, hw):
+        assert np.all(np.isfinite(t.sd_max))
+        assert np.all(np.diff(t.time_axis) > 0)
+        assert t.time_axis_source == "simulated"
+    np.testing.assert_array_equal(sim.time_axis, hw.time_axis)
+    print("OK", solver, drift)
+""")
+
+SYSTEM_SOLVERS = ["dif_partial", "dif_stale", "dif_pushsum"]
+
+
+@pytest.mark.parametrize("solver", SYSTEM_SOLVERS)
+def test_dropout_mesh_matches_simulator(solver):
+    """Acceptance (PR 6): the dropout-tolerant solvers — whose seeded
+    availability mask rides the scan's xs on both substrates — (a)
+    reduce to the dense mesh run bit-for-bit under an always-on
+    SystemSpec (push-sum to float round-off: its ratio correction is
+    different arithmetic), and (b) under seeded 30% Bernoulli dropout
+    match the simulator trajectory to <= 2e-6 with a finite, strictly
+    monotone, substrate-independent simulated time axis."""
+    r = subprocess.run([sys.executable, "-c", SYSTEM_SCRIPT, solver],
+                       capture_output=True, text=True, cwd=REPO_ROOT,
+                       timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert f"OK {solver}" in r.stdout

@@ -1,0 +1,364 @@
+"""System-realism layer (PR 6): SystemSpec validation and seeded fault
+schedules, the dropout-tolerant consensus rules (partial / stale /
+push-sum) and their degenerate bit-identity with dense gossip, the
+event-driven simulated clock vs the closed-form pricing, the CHOCO
+consensus step size at aggressive sparsification, deterministic time
+axes, and the sweep driver."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.api import (ExperimentSpec, InitSpec, ProblemSpec, SolverSpec,
+                       SystemSpec, TopologySpec, get_solver,
+                       run_experiment, materialize, system_time_axis)
+from repro.core import comm_model as cm
+from repro.distributed import get_rule
+from repro.distributed.consensus import (masked_mixing_matrix,
+                                         push_sum_matrix)
+from repro.distributed.graphs import erdos_renyi
+from repro.distributed.mixing import metropolis_weights
+
+TINY = ExperimentSpec(
+    problem=ProblemSpec(d=36, T=24, r=3, n=22, L=8, kappa=1.5),
+    topology=TopologySpec(family="erdos_renyi", p=0.5, seed=3,
+                          weights="metropolis"),
+    init=InitSpec(T_pm=12, T_con=5),
+    solver=SolverSpec(name="dif_altgdmin", T_GD=30, T_con=3))
+
+DROP30 = SystemSpec(availability="bernoulli", p_on=0.7, seed=7)
+
+
+def _with(spec: ExperimentSpec, **kw) -> ExperimentSpec:
+    solver_kw = {k: kw.pop(k) for k in list(kw)
+                 if k in ("name", "T_GD", "T_con", "compression",
+                          "compression_k", "consensus_gamma")}
+    if solver_kw:
+        kw["solver"] = dataclasses.replace(spec.solver, **solver_kw)
+    return dataclasses.replace(spec, **kw)
+
+
+def _mixing(L: int = 8, seed: int = 3, p: float = 0.5):
+    g = erdos_renyi(L, p, seed=seed)
+    return g, jnp.asarray(metropolis_weights(g))
+
+
+# ----------------------------------------------------- SystemSpec schema
+
+@pytest.mark.parametrize("bad", [
+    dict(availability="sometimes"),
+    dict(availability="bernoulli", p_on=1.3),
+    dict(availability="bernoulli", p_on=-0.1),
+    dict(availability="markov", p_drop=2.0),
+    dict(availability="markov", p_return=-0.5),
+    dict(straggler_prob=1.5),
+    dict(straggler_factor=0.5),
+    dict(speed_spread=-1.0),
+    dict(latency_s=-1e-3),
+    dict(jitter_std_s=-1e-6),
+])
+def test_systemspec_rejects_bad_fields_at_construction(bad):
+    with pytest.raises(ValueError):
+        SystemSpec(**bad)
+
+
+def test_systemspec_json_roundtrip():
+    spec = _with(TINY, name="dif_partial")
+    spec = dataclasses.replace(spec, system=DROP30)
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.system == DROP30
+    # a spec WITHOUT a system layer round-trips to None, not a default
+    assert ExperimentSpec.from_json(TINY.to_json()).system is None
+
+
+def test_availability_mask_semantics_and_determinism():
+    T_GD, L = 400, 10
+    always = SystemSpec().availability_mask(T_GD, L)
+    assert always.all() and always.shape == (T_GD, L)
+    # bernoulli: seeded, reproducible, empirical rate near p_on
+    m1 = DROP30.availability_mask(T_GD, L)
+    m2 = DROP30.availability_mask(T_GD, L)
+    np.testing.assert_array_equal(m1, m2)
+    assert 0.6 < m1.mean() < 0.8
+    # a different seed gives a different schedule
+    m3 = dataclasses.replace(DROP30, seed=8).availability_mask(T_GD, L)
+    assert not np.array_equal(m1, m3)
+    # markov: p_drop=0 never leaves the on state; symmetric rates hover
+    # near the stationary p_return / (p_drop + p_return)
+    on = SystemSpec(availability="markov", p_drop=0.0)
+    assert on.is_always_on and on.availability_mask(50, L).all()
+    mk = SystemSpec(availability="markov", p_drop=0.3, p_return=0.3,
+                    seed=5).availability_mask(2000, L)
+    assert 0.4 < mk.mean() < 0.6
+
+
+def test_node_speeds_seeded_and_bounded():
+    s = SystemSpec(speed_spread=0.5, seed=3)
+    v1, v2 = s.node_speeds(12), s.node_speeds(12)
+    np.testing.assert_array_equal(v1, v2)
+    assert np.all(v1 >= 1.0) and np.all(v1 <= 1.5)
+    np.testing.assert_array_equal(SystemSpec().node_speeds(12), np.ones(12))
+
+
+# ----------------------------------------- masked mixing-matrix algebra
+
+def test_masked_matrix_full_mask_is_bitwise_identity():
+    _, W = _mixing()
+    m = jnp.ones(W.shape[0], W.dtype)
+    np.testing.assert_array_equal(np.asarray(masked_mixing_matrix(W, m)),
+                                  np.asarray(W))
+
+
+def test_masked_matrix_rows_stochastic_under_dropout():
+    _, W = _mixing()
+    m = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], W.dtype)
+    Wm = masked_mixing_matrix(W, m)
+    np.testing.assert_allclose(np.asarray(Wm.sum(1)), 1.0, atol=1e-12)
+    # no weight crosses a dead endpoint (off-diagonal rows/cols zero)
+    dead = np.asarray(m) == 0
+    off = np.asarray(Wm) - np.diag(np.diag(np.asarray(Wm)))
+    assert np.all(off[dead] == 0) and np.all(off[:, dead] == 0)
+
+
+def test_push_sum_matrix_column_stochastic():
+    _, W = _mixing()
+    m = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], W.dtype)
+    C = push_sum_matrix(W, m)
+    np.testing.assert_allclose(np.asarray(C.sum(0)), 1.0, atol=1e-12)
+
+
+def test_push_sum_weight_invariant_and_full_mask_matches_dense():
+    """The companion weights stay a probability vector up to scale
+    (Σ_g w_g = L through any masked-round product), and at full mask
+    the bias-corrected readout agrees with plain dense gossip."""
+    L = 8
+    _, W = _mixing(L)
+    rng = np.random.default_rng(0)
+    w = jnp.ones((L, 1), jnp.float64)
+    for _ in range(6):
+        m = jnp.asarray((rng.random(L) < 0.7).astype(np.float64))
+        m = m.at[int(rng.integers(L))].set(1.0)   # keep >= 1 node live
+        w = push_sum_matrix(W, m) @ w
+        np.testing.assert_allclose(float(w.sum()), L, rtol=1e-12)
+        assert np.all(np.asarray(w) >= 0)
+    Z = jnp.asarray(rng.standard_normal((L, 6, 2)))
+    ones = jnp.ones(L, jnp.float64)
+    dense = get_rule("gossip").make_sim_mixer(W, 4, backend="xla-ref")(Z)
+    push = get_rule("push_sum_gossip").make_sim_masked_mixer(
+        W, 4, backend="xla-ref")(Z, ones)
+    np.testing.assert_allclose(np.asarray(push), np.asarray(dense),
+                               rtol=1e-10, atol=1e-12)
+
+
+# ------------------------------------------- degenerate anchor (runner)
+
+def test_degenerate_system_spec_is_bit_identical_to_dense():
+    """An always-on SystemSpec must not perturb the trajectory: the
+    partial and stale solvers reduce to dense dif_altgdmin bit-for-bit,
+    push-sum to float round-off (its ratio correction is genuinely
+    different arithmetic)."""
+    dense = run_experiment(TINY, key=0)
+    mat = dense.materialized
+    for name in ("dif_partial", "dif_stale"):
+        spec = dataclasses.replace(_with(TINY, name=name),
+                                   system=SystemSpec())
+        t = run_experiment(spec, key=0, materialized=mat)
+        np.testing.assert_array_equal(np.asarray(t.U_nodes),
+                                      np.asarray(dense.U_nodes))
+        np.testing.assert_array_equal(t.sd_max, dense.sd_max)
+        assert t.time_axis_source == "simulated"
+    spec = dataclasses.replace(_with(TINY, name="dif_pushsum"),
+                               system=SystemSpec())
+    t = run_experiment(spec, key=0, materialized=mat)
+    np.testing.assert_allclose(t.sd_max, dense.sd_max,
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_dropout_on_unaware_solver_raises():
+    spec = dataclasses.replace(TINY, system=DROP30)
+    with pytest.raises(ValueError, match="dropout"):
+        run_experiment(spec, key=0)
+    # but an always-on system layer is fine on any solver (it only
+    # changes the clock)
+    t = run_experiment(dataclasses.replace(TINY, system=SystemSpec()),
+                      key=0)
+    assert t.time_axis_source == "simulated"
+
+
+def test_dropout_solvers_converge_under_30pct_bernoulli():
+    """Seeded 30% dropout: all three dropout-tolerant rules keep
+    contracting (finite everywhere, big net decrease) and the simulated
+    clock stays strictly monotone."""
+    base = _with(TINY, T_GD=70)
+    mat = materialize(base, key=1)
+    for name in ("dif_partial", "dif_stale", "dif_pushsum"):
+        spec = dataclasses.replace(_with(base, name=name), system=DROP30)
+        t = run_experiment(spec, key=1, materialized=mat)
+        assert np.all(np.isfinite(t.sd_max)), name
+        assert t.sd_max[-1] < 0.2 * t.sd_max[0], name
+        assert np.all(np.diff(t.time_axis) > 0), name
+        assert t.time_axis_source == "simulated"
+
+
+def test_masked_trajectory_deterministic_across_substrates():
+    """One seeded fault schedule, two substrates: the simulator scan and
+    the SPMD mesh runtime see the identical mask and agree on the
+    trajectory to float tolerance."""
+    from repro.core.altgdmin import dif_partial_altgdmin
+    from repro.core.runtime import dif_partial_mesh
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        pytest.skip("needs >= 2 devices (run under "
+                    "xla_force_host_platform_device_count)")
+    L = n_dev
+    spec = dataclasses.replace(
+        TINY, problem=dataclasses.replace(TINY.problem, L=L, T=3 * L))
+    mat = materialize(spec, key=2)
+    avail = jnp.asarray(DROP30.availability_mask(12, L).astype(np.float64))
+    sim = dif_partial_altgdmin(mat.init.U0, mat.Xg, mat.yg, mat.W,
+                               eta=mat.eta, T_GD=12, T_con=3,
+                               U_star=mat.problem.U_star, avail=avail)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("nodes",))
+    msh = dif_partial_mesh(mat.init.U0, mat.Xg, mat.yg, mesh, "nodes",
+                           eta=mat.eta, T_GD=12, T_con=3,
+                           U_star=mat.problem.U_star, avail=avail,
+                           shifts=tuple(range(1, L)), self_weight=None,
+                           W=mat.W)
+    np.testing.assert_allclose(np.asarray(sim.U_nodes),
+                               np.asarray(msh.U_nodes), atol=2e-6)
+    np.testing.assert_allclose(np.asarray(sim.sd_max),
+                               np.asarray(msh.sd_max), atol=2e-6)
+
+
+# --------------------------------------------------- event-driven clock
+
+def test_zero_jitter_simulated_axis_matches_closed_form():
+    """With every node live, no jitter, no stragglers and uniform
+    speeds, the event-driven clock must collapse to the closed-form
+    decentralized pricing exactly."""
+    spec = dataclasses.replace(
+        TINY, system=SystemSpec(jitter_std_s=0.0))
+    solver = get_solver("dif_altgdmin")
+    g = spec.topology.build_graph(spec.problem.L)
+    sim_axis = system_time_axis(spec, solver, g)
+    model = dataclasses.replace(cm.ETHERNET_1GBPS, jitter_std_s=0.0)
+    closed = cm.decentralized_time_axis(
+        spec.solver.T_GD, spec.solver.T_con, spec.problem.d,
+        spec.problem.r, g.max_degree, spec.comm.compute_s_per_iter,
+        model=model)
+    np.testing.assert_allclose(sim_axis, closed, rtol=1e-12, atol=1e-12)
+
+
+def test_jittered_simulated_axis_stays_near_closed_form():
+    spec = dataclasses.replace(TINY, system=SystemSpec())
+    solver = get_solver("dif_altgdmin")
+    g = spec.topology.build_graph(spec.problem.L)
+    sim_axis = system_time_axis(spec, solver, g)
+    model = dataclasses.replace(cm.ETHERNET_1GBPS, jitter_std_s=0.0)
+    closed = cm.decentralized_time_axis(
+        spec.solver.T_GD, spec.solver.T_con, spec.problem.d,
+        spec.problem.r, g.max_degree, spec.comm.compute_s_per_iter,
+        model=model)
+    assert np.all(np.diff(sim_axis) > 0)
+    # max-over-neighbours jitter biases each round slightly ABOVE the
+    # jitter-free closed form; 10% bounds it without pinning the rng
+    np.testing.assert_allclose(sim_axis, closed, rtol=0.10)
+
+
+def test_dropout_saves_simulated_time():
+    """Down nodes send nothing, so the 30%-dropout axis must run faster
+    than the always-on axis under the same spec."""
+    solver = get_solver("dif_partial")
+    g = TINY.topology.build_graph(TINY.problem.L)
+    on = system_time_axis(dataclasses.replace(
+        _with(TINY, name="dif_partial"), system=SystemSpec()), solver, g)
+    off = system_time_axis(dataclasses.replace(
+        _with(TINY, name="dif_partial"), system=DROP30), solver, g)
+    assert off[-1] < on[-1]
+
+
+def test_straggler_and_speed_spread_slow_the_clock():
+    solver = get_solver("dif_altgdmin")
+    g = TINY.topology.build_graph(TINY.problem.L)
+    base = system_time_axis(dataclasses.replace(
+        TINY, system=SystemSpec()), solver, g)
+    slow = system_time_axis(dataclasses.replace(
+        TINY, system=SystemSpec(speed_spread=1.0, straggler_prob=0.2,
+                                straggler_factor=5.0)), solver, g)
+    assert slow[-1] > base[-1]
+
+
+def test_time_axes_deterministic_across_runs():
+    """Two identical invocations — closed-form AND simulated — produce
+    the identical axis: every jitter draw threads a spec-seeded rng."""
+    t1 = run_experiment(TINY, key=0)
+    t2 = run_experiment(TINY, key=0, materialized=t1.materialized)
+    np.testing.assert_array_equal(t1.time_axis, t2.time_axis)
+    assert t1.time_axis_source == "closed_form"
+    spec = dataclasses.replace(_with(TINY, name="dif_partial"),
+                               system=DROP30)
+    s1 = run_experiment(spec, key=0, materialized=t1.materialized)
+    s2 = run_experiment(spec, key=0, materialized=t1.materialized)
+    np.testing.assert_array_equal(s1.time_axis, s2.time_axis)
+
+
+# ------------------------------------------------ CHOCO consensus gamma
+
+def test_choco_gamma_stabilizes_aggressive_sparsification():
+    """dif_topk at k = d/16 (94% of entries dropped): the undamped rule
+    stagnates — each round moves a node's copy by a full compressed
+    correction, too coarse at this sparsity — while the CHOCO step size
+    γ < 1 damps the correction and restores convergence.  The default
+    γ=1 stays bitwise the historical code path."""
+    d = TINY.problem.d  # 36 -> k = 2 ~ d/16
+    k = max(2, d // 16)
+    base = _with(TINY, name="dif_topk", T_GD=200, compression_k=k)
+    t = run_experiment(base, key=0)
+    assert np.all(np.isfinite(t.sd_max))
+    damped = run_experiment(_with(base, consensus_gamma=0.2), key=0,
+                            materialized=t.materialized)
+    assert np.all(np.isfinite(damped.sd_max))
+    assert damped.sd_max[-1] < 0.06                 # converged
+    assert damped.sd_max[-1] < 0.1 * t.sd_max[-1]   # gamma=1 stagnates
+    # explicit gamma=1.0 is the same code path bit-for-bit
+    short = _with(base, T_GD=30)
+    t0 = run_experiment(short, key=0, materialized=t.materialized)
+    t1 = run_experiment(_with(short, consensus_gamma=1.0), key=0,
+                        materialized=t.materialized)
+    np.testing.assert_array_equal(np.asarray(t0.U_nodes),
+                                  np.asarray(t1.U_nodes))
+
+
+def test_consensus_gamma_rejected_on_dense_solver():
+    with pytest.raises(ValueError, match="consensus_gamma"):
+        run_experiment(_with(TINY, consensus_gamma=0.5), key=0)
+
+
+# ------------------------------------------------------------ sweep CLI
+
+def test_sweep_cell_and_grid_in_process(tmp_path):
+    from benchmarks import sweep
+    spec = _with(TINY, T_GD=10)
+    cells = [
+        {"key": 0, "spec": json.loads(spec.to_json())},
+        {"key": 1, "spec": json.loads(dataclasses.replace(
+            _with(spec, name="dif_partial"),
+            system=DROP30).to_json())},
+    ]
+    grid = tmp_path / "grid.json"
+    out = tmp_path / "rows.csv"
+    grid.write_text(json.dumps(cells))
+    sweep.main(["run", "--specs", str(grid), "--out", str(out),
+                "--in-process"])
+    lines = out.read_text().strip().splitlines()
+    assert len(lines) == 1 + 2 * len(sweep.CHECKPOINTS)
+    assert lines[0].split(",")[:2] == ["config", "solver"]
+    # the dropout cell priced its axis with the simulated clock
+    assert any("simulated" in ln for ln in lines[1:])
+    assert any("closed_form" in ln for ln in lines[1:])
