@@ -51,6 +51,7 @@ def main() -> None:
                                          bench_compression,
                                          bench_consensus, bench_kernels)
     from benchmarks.system_bench import bench_system
+    from benchmarks.serving_bench import bench_serving
 
     t0 = time.time()
     engine_rows = bench_altgdmin_engine(quick=args.quick)
@@ -61,6 +62,8 @@ def main() -> None:
     emit("compression_combine", compression_rows, args.out)
     system_rows = bench_system(quick=args.quick)
     emit("system_dropout", system_rows, args.out)
+    serving_rows = bench_serving(quick=args.quick)
+    emit("serving_throughput", serving_rows, args.out)
     bench_json = {
         "benchmark": "altgdmin_engine",
         "description": "fused node-batched AltGDmin iteration engine: "
@@ -99,6 +102,18 @@ def main() -> None:
                            "seeded 30%-dropout Bernoulli availability "
                            "schedule, shared materialization",
             "rows": system_rows,
+        },
+        "serving": {
+            "description": "few-shot personalization serving: the "
+                           "packed batched min-B solve — requests/sec "
+                           "× batch × d frontier with p50/p99 "
+                           "closed-loop latency (section=throughput), "
+                           "b_new recovery error vs samples-per-user "
+                           "T_new (section=recovery), and the "
+                           "drifting-U continual mode (θ̂ error falls "
+                           "as fresher checkpoints publish, "
+                           "section=drifting)",
+            "rows": serving_rows,
         },
     }
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -1,6 +1,8 @@
 """Serving example: batched generation across architecture families —
 attention (GQA ring-buffer KV cache), SSM (O(1) recurrent state), and the
-sliding-window long-context variant.
+sliding-window long-context variant.  (The MTRL counterpart — batched
+min-B personalization over a checkpointed U — is
+``examples/serve_personalize.py``.)
 
   PYTHONPATH=src python examples/serve_decode.py
 """

@@ -213,7 +213,9 @@ def system_time_axis(spec: ExperimentSpec, solver: SolverDef, graph: Graph,
 
 
 def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
-                   materialized: Materialized | None = None) -> Trace:
+                   materialized: Materialized | None = None,
+                   checkpoint_every: int | None = None,
+                   checkpoint_dir: str | None = None) -> Trace:
     """Materialize ``spec`` and run it end to end.
 
     ``engine`` optionally injects a pre-built :class:`AltgdminEngine`
@@ -227,6 +229,22 @@ def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
     pass a materialization of a spec sharing this spec's problem /
     topology / init sub-specs and key; η is re-resolved from this spec's
     SolverSpec either way.
+
+    ``checkpoint_every`` (with ``checkpoint_dir``) publishes U snapshots
+    for the serving subsystem: the spectral init at step 0, then the
+    node bases every that-many outer iterations (and at T_GD), each a
+    crash-safe checkpoint via
+    :func:`repro.serving.publisher.publish_representation`.  The run is
+    executed in segments of that length with the U iterate chained
+    through, so a server can hot-swap to fresher U's while the solver
+    keeps refining (the drifting-U continual mode).  Solvers whose scan
+    carry is just U (dif/dec/dgd/centralized, partial/pushsum) produce
+    BIT-IDENTICAL trajectories to the unsegmented run (pinned in
+    tests/test_serving.py); solvers carrying auxiliary state
+    (exact_diffusion's ψ, the compressed rules' public copies,
+    stale_gossip's queue) re-anchor that state at segment boundaries.
+    Simulator substrate only; incompatible with ``n_folds > 1`` (the
+    fold schedule restarts per segment).
     """
     from repro.core.engine import resolve_engine
     solver = get_solver(spec.solver.name)
@@ -258,12 +276,29 @@ def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
         sys_spec = spec.system if spec.system is not None else SystemSpec()
         avail_np = sys_spec.availability_mask(spec.solver.T_GD,
                                               spec.problem.L)
+    if checkpoint_every is not None:
+        if checkpoint_dir is None:
+            raise ValueError("checkpoint_every needs checkpoint_dir")
+        if checkpoint_every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got "
+                             f"{checkpoint_every}")
+        if spec.substrate == "mesh":
+            raise ValueError("checkpoint publishing runs on "
+                             "substrate='simulator' only")
+        if spec.problem.n_folds > 1:
+            raise ValueError("checkpoint_every segments the run, which "
+                             "would restart the n_folds sample-split "
+                             "schedule; use n_folds <= 1")
     mat = materialize(spec, key) if materialized is None else materialized
     eta = _resolve_spec_eta(spec, mat.init)
     eng = resolve_engine(engine, spec.engine.backend,
                          blk_d=spec.engine.blk_d)
     if spec.substrate == "mesh":
         result = _run_mesh(spec, solver, mat, eng, eta, avail=avail_np)
+    elif checkpoint_every is not None:
+        result = _run_segmented(spec, solver, mat, eng, eta,
+                                avail=avail_np, every=checkpoint_every,
+                                directory=checkpoint_dir)
     else:
         extra = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
         if avail_np is not None:
@@ -288,6 +323,45 @@ def run_experiment(spec: ExperimentSpec, key=None, *, engine=None,
                  spread=np.asarray(result.spread), eta=result.eta,
                  time_axis=time_axis, materialized=mat,
                  time_axis_source=source)
+
+
+def _run_segmented(spec: ExperimentSpec, solver: SolverDef,
+                   mat: Materialized, eng, eta: float, *,
+                   avail: np.ndarray | None, every: int,
+                   directory: str) -> RunResult:
+    """The checkpoint-publishing driver: run the solver in segments of
+    ``every`` iterations, chaining the U iterate and publishing a
+    serving checkpoint after each segment (plus the step-0 init).  The
+    availability schedule is sliced per segment so the fault sequence
+    matches the unsegmented run row for row."""
+    from repro.serving.publisher import publish_representation
+    T_GD = spec.solver.T_GD
+    extra = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
+    publish_representation(directory, 0, mat.init.U0)
+    U_cur = mat.init.U0
+    chunks = []
+    done = 0
+    while done < T_GD:
+        seg = min(every, T_GD - done)
+        kw = dict(extra)
+        if avail is not None:
+            kw["avail"] = jnp.asarray(avail[done:done + seg])
+        res = solver.call(U_cur, mat.Xg, mat.yg, mat.W, mat.adj, eta=eta,
+                          T_GD=seg, T_con=spec.solver.T_con,
+                          U_star=mat.problem.U_star, engine=eng, **kw)
+        done += seg
+        publish_representation(directory, done, res.U_nodes)
+        chunks.append(res)
+        U_cur = res.U_nodes
+    def cat(name):
+        return jnp.concatenate([getattr(c, name) for c in chunks])
+
+    sfs = [c.send_frac for c in chunks]
+    return RunResult(chunks[-1].U_nodes, chunks[-1].B_nodes,
+                     cat("sd_max"), cat("sd_mean"), cat("spread"), eta,
+                     send_frac=(jnp.concatenate(sfs)
+                                if all(s is not None for s in sfs)
+                                else None))
 
 
 def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,

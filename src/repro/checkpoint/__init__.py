@@ -1,1 +1,9 @@
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+"""Checkpoint store: path-keyed .npz shards + msgpack manifest, with
+crash-safe (stage-then-rename) saves.  ``latest_step`` only reports
+complete checkpoints, so a hot-swapping reader (the serving subsystem's
+:class:`repro.serving.publisher.HotSwapSource`) can never load a
+partially written step."""
+from repro.checkpoint.store import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import os
 import re
+import shutil
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +30,17 @@ def _flatten_with_paths(tree):
 
 def save_checkpoint(directory: str, step: int, tree,
                     shard_bytes: int = 1 << 30) -> str:
-    """Save ``tree`` under directory/step_{step:09d}. Returns the path."""
+    """Save ``tree`` under directory/step_{step:09d}. Returns the path.
+
+    Crash-safe: shards and manifest are written into a ``step_*.tmp``
+    staging directory and renamed into place only once complete, so a
+    killed save can never be picked up by :func:`latest_step` (which
+    also requires the manifest to exist)."""
     path = os.path.join(directory, f"step_{step:09d}")
-    os.makedirs(path, exist_ok=True)
+    tmp = path + ".tmp"
+    if os.path.isdir(tmp):          # stale staging dir from a killed save
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     paths, leaves = _flatten_with_paths(tree)
     leaves = [np.asarray(x) for x in leaves]
 
@@ -49,14 +58,17 @@ def save_checkpoint(directory: str, step: int, tree,
         shards.append(cur)
 
     for i, shard in enumerate(shards):
-        np.savez(os.path.join(path, f"shard_{i:05d}.npz"), **shard)
+        np.savez(os.path.join(tmp, f"shard_{i:05d}.npz"), **shard)
     manifest = {
         "step": step,
         "index": {p: list(v) for p, v in index.items()},
         "treedef": jax.tree_util.tree_structure(tree).__repr__(),
     }
-    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
+    if os.path.isdir(path):         # overwrite: retire the old complete dir
+        shutil.rmtree(path)
+    os.replace(tmp, path)
     return path
 
 
@@ -87,9 +99,17 @@ def restore_checkpoint(directory: str, step: int, like):
 
 
 def latest_step(directory: str):
-    """Highest step number present, or None."""
+    """Highest COMPLETE step number present, or None.
+
+    A directory counts only when its ``manifest.msgpack`` exists — the
+    manifest lands atomically with the rename in :func:`save_checkpoint`,
+    so in-flight ``step_*.tmp`` staging dirs (excluded by the name
+    pattern anyway) and manually truncated dirs are never offered to a
+    hot-swapping reader."""
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
+             if (m := re.fullmatch(r"step_(\d+)", d))
+             and os.path.isfile(os.path.join(directory, d,
+                                             "manifest.msgpack"))]
     return max(steps) if steps else None

@@ -1,0 +1,26 @@
+"""Few-shot personalization serving — the paper's min-B step as an
+online inference workload over a checkpointed, drifting representation.
+
+Layers (bottom up):
+
+  * :mod:`repro.serving.engine`    — :class:`ServingEngine`, the packed
+    batched min-B solve (one training-engine dispatch per batch);
+  * :mod:`repro.serving.queue`     — deadline batcher + bounded queue +
+    seeded closed-loop load (:func:`run_closed_loop`);
+  * :mod:`repro.serving.publisher` — U snapshots on the crash-safe
+    checkpoint store, and the server's hot-swap reader.
+"""
+from repro.serving.engine import ServingEngine, pack_requests
+from repro.serving.publisher import (HotSwapSource, RepresentationPublisher,
+                                     deployable_basis, load_representation,
+                                     publish_representation)
+from repro.serving.queue import (RequestGenerator, ServeRecord, ServeReport,
+                                 ServeRequest, run_closed_loop)
+
+__all__ = [
+    "ServingEngine", "pack_requests",
+    "RequestGenerator", "ServeRequest", "ServeRecord", "ServeReport",
+    "run_closed_loop",
+    "RepresentationPublisher", "HotSwapSource", "publish_representation",
+    "load_representation", "deployable_basis",
+]

@@ -1,0 +1,132 @@
+"""Checkpoint store: pytree round-trips (dict / list / NamedTuple paths,
+dtype preservation, missing-leaf KeyError), shard chunking, and the
+crash-safety contract — saves stage into a ``step_*.tmp`` directory and
+rename atomically, and ``latest_step`` never reports a directory whose
+manifest is missing, so a killed save can't be hot-swapped in."""
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+class Carry(NamedTuple):
+    U: jnp.ndarray
+    step: jnp.ndarray
+
+
+def _tree():
+    return {
+        "params": [jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                   jnp.ones((4,), jnp.float64) * np.pi],
+        "carry": Carry(U=jnp.eye(3, dtype=jnp.float64),
+                       step=jnp.asarray(7, jnp.int32)),
+        "scalar": jnp.asarray(2.5, jnp.float16),
+    }
+
+
+def _like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+# ------------------------------------------------------------ round trip
+
+def test_roundtrip_nested_pytree(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 3, tree)
+    out = restore_checkpoint(str(tmp_path), 3, _like(tree))
+    flat_in = jax.tree_util.tree_leaves(tree)
+    flat_out = jax.tree_util.tree_leaves(out)
+    assert len(flat_in) == len(flat_out)
+    for a, b in zip(flat_in, flat_out):
+        assert a.dtype == b.dtype, "dtype must survive the round trip"
+        assert a.shape == b.shape
+        assert bool(jnp.all(a == b))
+    # structure (incl. the NamedTuple node) survives
+    assert isinstance(out["carry"], Carry)
+    assert isinstance(out["params"], list)
+
+
+def test_roundtrip_many_shards(tmp_path):
+    tree = {"a": jnp.arange(1000, dtype=jnp.float32),
+            "b": jnp.arange(1000, dtype=jnp.float64),
+            "c": jnp.arange(10, dtype=jnp.int32)}
+    path = save_checkpoint(str(tmp_path), 0, tree, shard_bytes=4096)
+    shards = [f for f in os.listdir(path) if f.startswith("shard_")]
+    assert len(shards) > 1, "shard_bytes must chunk the leaves"
+    out = restore_checkpoint(str(tmp_path), 0, _like(tree))
+    for k in tree:
+        assert bool(jnp.all(out[k] == tree[k]))
+        assert out[k].dtype == tree[k].dtype
+
+
+def test_missing_leaf_raises_keyerror(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones(3)})
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore_checkpoint(str(tmp_path), 1,
+                           {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_extra_manifest_leaves_are_ignored(tmp_path):
+    # the serving reader restores only {"U"} out of {"U", "U_nodes"}
+    save_checkpoint(str(tmp_path), 2, {"U": jnp.ones((3, 2)),
+                                       "U_nodes": jnp.ones((4, 3, 2))})
+    out = restore_checkpoint(str(tmp_path), 2, {"U": jnp.zeros((3, 2))})
+    assert bool(jnp.all(out["U"] == 1))
+
+
+# ------------------------------------------------------------ latest_step
+
+def test_latest_step_empty_and_missing(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_latest_step_orders_numerically(tmp_path):
+    for s in (3, 10, 7):
+        save_checkpoint(str(tmp_path), s, {"x": jnp.zeros(2)})
+    assert latest_step(str(tmp_path)) == 10
+
+
+# ------------------------------------------------------------ crash safety
+
+def test_save_stages_then_renames(tmp_path):
+    path = save_checkpoint(str(tmp_path), 5, {"x": jnp.ones(4)})
+    assert os.path.isdir(path)
+    assert not os.path.isdir(path + ".tmp"), \
+        "the staging dir must be renamed away on completion"
+    assert os.path.isfile(os.path.join(path, "manifest.msgpack"))
+
+
+def test_latest_step_skips_manifestless_dir(tmp_path):
+    # simulate a save killed after shard writes but before the manifest
+    save_checkpoint(str(tmp_path), 2, {"x": jnp.zeros(2)})
+    dead = tmp_path / "step_000000009"
+    dead.mkdir()
+    (dead / "shard_00000.npz").write_bytes(b"partial")
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_latest_step_ignores_tmp_staging_dir(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros(2)})
+    staging = tmp_path / "step_000000008.tmp"
+    staging.mkdir()
+    (staging / "manifest.msgpack").write_bytes(b"in flight")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_save_clears_stale_staging_and_overwrites(tmp_path):
+    # a stale .tmp from a killed save must not break the next save,
+    # and re-saving a step replaces the old content
+    stale = tmp_path / "step_000000004.tmp"
+    stale.mkdir()
+    (stale / "junk").write_bytes(b"x")
+    save_checkpoint(str(tmp_path), 4, {"x": jnp.ones(3)})
+    assert not stale.exists()
+    save_checkpoint(str(tmp_path), 4, {"x": jnp.full((3,), 9.0)})
+    out = restore_checkpoint(str(tmp_path), 4, {"x": jnp.zeros(3)})
+    assert bool(jnp.all(out["x"] == 9.0))

@@ -1,0 +1,373 @@
+"""Serving subsystem: packed batched min-B parity with the training
+engine (bitwise on xla-ref, tolerance on pallas-interpret), exactness of
+the two padding axes (batch slots and sample rows), the deadline
+batcher's launch/shed semantics under a deterministic service model, the
+publisher / hot-swap lifecycle, and the runner's ``checkpoint_every``
+segmented mode (bit-identical trajectory + drifting-U error decrease)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ExperimentSpec, InitSpec, ProblemSpec, SolverSpec,
+                       TopologySpec, run_experiment)
+from repro.checkpoint import latest_step
+from repro.core.engine import AltgdminEngine
+from repro.serving import (HotSwapSource, RepresentationPublisher,
+                           RequestGenerator, ServeRequest, ServingEngine,
+                           deployable_basis, load_representation,
+                           pack_requests, publish_representation,
+                           run_closed_loop)
+
+D, R_RANK = 40, 3
+
+
+def _basis(key, d=D, r=R_RANK, dtype=jnp.float64):
+    return jnp.linalg.qr(jax.random.normal(key, (d, r), dtype))[0]
+
+
+def _requests(key, d=D, t_news=(16, 16, 16), dtype=jnp.float64):
+    X_list, y_list = [], []
+    for i, t in enumerate(t_news):
+        kx, ky = jax.random.split(jax.random.fold_in(key, i))
+        X_list.append(jax.random.normal(kx, (t, d), dtype))
+        y_list.append(jax.random.normal(ky, (t,), dtype))
+    return X_list, y_list
+
+
+# ================================================================ parity
+
+def test_packed_solve_is_the_training_minb_path():
+    """solve_packed ≡ AltgdminEngine.minimize_B on the same packed
+    layout, bit for bit — serving IS the training fold solve."""
+    key = jax.random.PRNGKey(0)
+    U = _basis(key)
+    X_list, y_list = _requests(jax.random.fold_in(key, 1))
+    X, y, R = pack_requests(X_list, y_list, max_batch=4)
+    eng = ServingEngine(U, max_batch=4, backend="xla-ref")
+    B_serve, _ = eng.solve_packed(X, y)
+    B_train = AltgdminEngine("xla-ref").minimize_B(U[None], X[None],
+                                                   y[None])[0]
+    assert jnp.array_equal(B_serve, B_train)
+    assert R == 3 and B_serve.shape == (4, R_RANK)
+
+
+def test_ragged_batch_matches_per_request_training_solve():
+    """Heterogeneous T_new, one packed dispatch vs one training-engine
+    solve per request (each at its TRUE sample count — so this also
+    covers the zero-row padding): vmap batching is the only difference,
+    so agreement is ~1e-10, not bitwise."""
+    key = jax.random.PRNGKey(1)
+    U = _basis(key)
+    X_list, y_list = _requests(jax.random.fold_in(key, 1),
+                               t_news=(5, 9, 16, 12))
+    eng = ServingEngine(U, max_batch=4, backend="xla-ref")
+    B, theta, _ = eng.solve(X_list, y_list)
+    train = AltgdminEngine("xla-ref")
+    for i, (Xi, yi) in enumerate(zip(X_list, y_list)):
+        b_ref = train.minimize_B(U[None], Xi[None, None],
+                                 yi[None, None])[0, 0]
+        np.testing.assert_allclose(np.asarray(B[i]), np.asarray(b_ref),
+                                   rtol=0, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(theta),
+                               np.asarray(B @ U.T), rtol=0, atol=0)
+
+
+def test_batch_slot_padding_is_bitwise_exact():
+    """R=3 real requests served from a max_batch=3 engine vs a
+    max_batch=8 engine (5 dummy slots): real solutions identical bit
+    for bit — dummy slots never perturb real lanes."""
+    key = jax.random.PRNGKey(2)
+    U = _basis(key)
+    X_list, y_list = _requests(jax.random.fold_in(key, 1))
+    B_tight, _, _ = ServingEngine(U, max_batch=3,
+                                  backend="xla-ref").solve(X_list, y_list)
+    B_slack, _, _ = ServingEngine(U, max_batch=8,
+                                  backend="xla-ref").solve(X_list, y_list)
+    assert jnp.array_equal(B_tight, B_slack)
+
+
+def test_sample_bucket_padding_is_bitwise_exact():
+    """The same requests solved in a pad_n_to=8 bucket and a pad_n_to=32
+    bucket (3x the zero rows) give bit-identical b — zero rows add
+    exact zeros to the Gram and to Aᵀy."""
+    key = jax.random.PRNGKey(3)
+    U = _basis(key)
+    X_list, y_list = _requests(jax.random.fold_in(key, 1),
+                               t_news=(7, 11, 13))
+    B8, _, _ = ServingEngine(U, max_batch=4, pad_n_to=8,
+                             backend="xla-ref").solve(X_list, y_list)
+    B32, _, _ = ServingEngine(U, max_batch=4, pad_n_to=32,
+                              backend="xla-ref").solve(X_list, y_list)
+    assert jnp.array_equal(B8, B32)
+
+
+def test_pallas_interpret_matches_ref():
+    key = jax.random.PRNGKey(4)
+    U = _basis(key)
+    X_list, y_list = _requests(jax.random.fold_in(key, 1),
+                               t_news=(8, 16, 12))
+    B_ref, _, _ = ServingEngine(U, max_batch=4,
+                                backend="xla-ref").solve(X_list, y_list)
+    U32 = U.astype(jnp.float32)
+    B_pl, _, _ = ServingEngine(U32, max_batch=4,
+                               backend="pallas-interpret").solve(
+        [x.astype(jnp.float32) for x in X_list],
+        [v.astype(jnp.float32) for v in y_list])
+    np.testing.assert_allclose(np.asarray(B_pl), np.asarray(B_ref),
+                               rtol=0, atol=1e-6)
+
+
+def test_noiseless_request_recovers_truth():
+    """With U = U* and noiseless y, the served θ̂ is the user's true
+    regressor to solver precision — the few-shot personalization
+    promise."""
+    key = jax.random.PRNGKey(5)
+    U_star = _basis(key)
+    gen = RequestGenerator(np.asarray(U_star), t_new=16, seed=0)
+    reqs = gen.generate(6)
+    eng = ServingEngine(U_star, max_batch=8, backend="xla-ref")
+    _, theta, _ = eng.solve([q.X for q in reqs], [q.y for q in reqs])
+    for i, q in enumerate(reqs):
+        err = np.linalg.norm(np.asarray(theta[i]) - q.theta_star) \
+            / np.linalg.norm(q.theta_star)
+        assert err < 1e-9
+
+
+# ============================================================ validation
+
+def test_underdetermined_request_raises():
+    U = _basis(jax.random.PRNGKey(6))
+    eng = ServingEngine(U, max_batch=4, backend="xla-ref")
+    X = np.zeros((R_RANK - 1, D))          # T_new < r
+    with pytest.raises(ValueError, match="underdetermined"):
+        eng.solve([X], [np.zeros(R_RANK - 1)])
+
+
+def test_pack_requests_validation():
+    X = np.zeros((4, D))
+    with pytest.raises(ValueError, match="at least one"):
+        pack_requests([], [], max_batch=4)
+    with pytest.raises(ValueError, match="max_batch"):
+        pack_requests([X] * 5, [np.zeros(4)] * 5, max_batch=4)
+    with pytest.raises(ValueError, match="rows"):
+        pack_requests([X], [np.zeros(3)], max_batch=4)
+
+
+def test_update_representation_rejects_stacks():
+    eng = ServingEngine(_basis(jax.random.PRNGKey(7)), backend="xla-ref")
+    with pytest.raises(ValueError, match="single"):
+        eng.update_representation(jnp.zeros((4, D, R_RANK)))
+    eng.update_representation(_basis(jax.random.PRNGKey(8)), version=9)
+    assert eng.version == 9
+
+
+# ======================================================= deadline batcher
+
+def _tiny_engine(max_batch=4):
+    return ServingEngine(_basis(jax.random.PRNGKey(9), d=8, r=2),
+                         max_batch=max_batch, backend="xla-ref")
+
+
+def _burst(n, dt, t0=0.0, d=8, t_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(rid=i, X=rng.standard_normal((t_new, d)),
+                         y=rng.standard_normal(t_new),
+                         t_arrival=t0 + i * dt) for i in range(n)]
+
+
+def _const_service(_batch_size):
+    return 5e-3
+
+
+def test_batcher_full_batch_launches_at_fill_time():
+    """A dense burst fills max_batch-sized batches, each launched the
+    moment its last member arrived (not at the deadline)."""
+    reqs = _burst(8, dt=1e-4)
+    report = run_closed_loop(_tiny_engine(max_batch=4), reqs,
+                             max_wait_s=1.0, service_time=_const_service)
+    assert report.batch_sizes == [4, 4]
+    assert report.n_shed == 0
+    first = [r for r in report.records if r.rid < 4]
+    assert all(r.t_launch == pytest.approx(reqs[3].t_arrival)
+               for r in first)
+    assert sorted(r.rid for r in report.records) == list(range(8))
+
+
+def test_batcher_deadline_launches_short_batch():
+    """Sparse arrivals never fill a batch: each request rides alone and
+    waits exactly max_wait_s."""
+    reqs = _burst(3, dt=1.0)
+    report = run_closed_loop(_tiny_engine(max_batch=4), reqs,
+                             max_wait_s=2e-3, service_time=_const_service)
+    assert report.batch_sizes == [1, 1, 1]
+    for rec in report.records:
+        assert rec.queue_wait == pytest.approx(2e-3)
+        assert rec.latency == pytest.approx(2e-3 + 5e-3)
+
+
+def test_batcher_sheds_on_full_queue_and_serves_rest_exactly_once():
+    """A burst far beyond queue capacity during a slow solve: overflow
+    arrivals are shed and counted; every admitted request is served
+    exactly once; served + shed == offered."""
+
+    def slow(_batch_size):
+        return 1.0
+
+    reqs = _burst(20, dt=1e-4)
+    report = run_closed_loop(_tiny_engine(max_batch=4), reqs,
+                             max_wait_s=1e-3, queue_capacity=4,
+                             service_time=slow)
+    assert report.n_shed > 0
+    rids = [r.rid for r in report.records]
+    assert len(rids) == len(set(rids))
+    assert len(rids) + report.n_shed == 20
+    assert all(s <= 4 for s in report.batch_sizes)
+
+
+def test_batcher_rejects_inconsistent_limits():
+    eng = _tiny_engine(max_batch=4)
+    with pytest.raises(ValueError, match="packed capacity"):
+        run_closed_loop(eng, _burst(2, dt=1e-3), max_batch=8)
+    with pytest.raises(ValueError, match="cannot hold"):
+        run_closed_loop(eng, _burst(2, dt=1e-3), queue_capacity=2)
+
+
+def test_closed_loop_is_deterministic():
+    reqs = _burst(12, dt=2e-3)
+    kw = dict(max_wait_s=3e-3, service_time=_const_service)
+    r1 = run_closed_loop(_tiny_engine(), _burst(12, dt=2e-3), **kw)
+    r2 = run_closed_loop(_tiny_engine(), reqs, **kw)
+    assert r1.batch_sizes == r2.batch_sizes
+    assert [rec.latency for rec in r1.records] \
+        == [rec.latency for rec in r2.records]
+
+
+# ==================================================== publisher / hot swap
+
+def test_deployable_basis_is_orthonormal():
+    stack = jax.random.normal(jax.random.PRNGKey(10), (5, D, R_RANK))
+    U = deployable_basis(stack)
+    assert U.shape == (D, R_RANK)
+    np.testing.assert_allclose(np.asarray(U.T @ U), np.eye(R_RANK),
+                               atol=1e-10)
+
+
+def test_publisher_cadence(tmp_path):
+    pub = RepresentationPublisher(str(tmp_path), every=3)
+    stack = jax.random.normal(jax.random.PRNGKey(11), (2, 6, 2))
+    hits = [s for s in range(7) if pub.maybe(s, stack)]
+    assert hits == [0, 3, 6]
+    assert pub.published == [0, 3, 6]
+    assert latest_step(str(tmp_path)) == 6
+    with pytest.raises(ValueError):
+        RepresentationPublisher(str(tmp_path), every=0)
+
+
+def test_hot_swap_source_only_reports_newer(tmp_path):
+    d, r = 6, 2
+    U0 = _basis(jax.random.PRNGKey(12), d=d, r=r)
+    publish_representation(str(tmp_path), 0, U0)
+    src = HotSwapSource(str(tmp_path), d=d, r=r, dtype=jnp.float64)
+    step, U = src.poll()
+    assert step == 0
+    np.testing.assert_allclose(np.asarray(U),
+                               np.asarray(deployable_basis(U0)),
+                               atol=1e-12)
+    assert src.poll() is None                  # nothing newer
+    publish_representation(str(tmp_path), 5,
+                           _basis(jax.random.PRNGKey(13), d=d, r=r))
+    assert src.poll()[0] == 5
+    # an incomplete (manifest-less) newer dir stays invisible
+    os.mkdir(tmp_path / "step_000000009")
+    assert src.poll() is None
+
+
+# ==================================================== checkpointed training
+
+def _spec(T_GD=16):
+    return ExperimentSpec(
+        name="serving_test",
+        problem=ProblemSpec(d=30, T=24, r=2, n=24, L=4, kappa=2.0),
+        topology=TopologySpec(family="erdos_renyi", p=0.6, seed=1),
+        init=InitSpec(T_pm=10, T_con=5),
+        solver=SolverSpec(name="dif_altgdmin", T_GD=T_GD, T_con=3))
+
+
+@pytest.fixture(scope="module")
+def segmented_run(tmp_path_factory):
+    ckdir = str(tmp_path_factory.mktemp("serving_ck"))
+    spec = _spec()
+    seg = run_experiment(spec, key=0, checkpoint_every=4,
+                         checkpoint_dir=ckdir)
+    plain = run_experiment(spec, key=0)
+    return spec, ckdir, seg, plain
+
+
+def test_segmented_run_is_bit_identical(segmented_run):
+    _, _, seg, plain = segmented_run
+    assert np.array_equal(seg.sd_max, plain.sd_max)
+    assert np.array_equal(seg.sd_mean, plain.sd_mean)
+    assert jnp.array_equal(seg.U_nodes, plain.U_nodes)
+    assert np.array_equal(seg.time_axis, plain.time_axis)
+
+
+def test_segmented_run_publishes_schedule(segmented_run):
+    spec, ckdir, _, _ = segmented_run
+    steps = sorted(int(s.split("_")[1]) for s in os.listdir(ckdir))
+    assert steps == [0, 4, 8, 12, 16]
+    assert latest_step(ckdir) == spec.solver.T_GD
+    U = load_representation(ckdir, 16, d=spec.problem.d,
+                            r=spec.problem.r, dtype=jnp.float64)
+    assert U.shape == (spec.problem.d, spec.problem.r)
+
+
+def test_drifting_checkpoints_reduce_serving_error(segmented_run):
+    """The acceptance criterion of the continual mode: a fixed cohort's
+    θ̂ error falls MONOTONICALLY across the published checkpoints, from
+    the step-0 (spectral init) U to the final U."""
+    spec, ckdir, seg, _ = segmented_run
+    p = spec.problem
+    gen = RequestGenerator(np.asarray(seg.materialized.problem.U_star),
+                           t_new=12, seed=3)
+    reqs = gen.generate(24)
+    errs = []
+    eng = None
+    for step in (0, 4, 8, 12, 16):
+        U = load_representation(ckdir, step, d=p.d, r=p.r,
+                                dtype=jnp.float64)
+        if eng is None:
+            eng = ServingEngine(U, max_batch=24, backend="xla-ref",
+                                version=step)
+        else:
+            eng.update_representation(U, version=step)
+        _, theta, version = eng.solve([q.X for q in reqs],
+                                      [q.y for q in reqs])
+        assert version == step
+        theta = np.asarray(theta)
+        errs.append(float(np.mean(
+            [np.linalg.norm(theta[i] - q.theta_star)
+             / np.linalg.norm(q.theta_star)
+             for i, q in enumerate(reqs)])))
+    assert all(b < a for a, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < 0.75 * errs[0], errs
+
+
+def test_checkpoint_kwargs_guards(tmp_path):
+    spec = _spec(T_GD=2)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        run_experiment(spec, key=0, checkpoint_every=1)
+    with pytest.raises(ValueError, match=">= 1"):
+        run_experiment(spec, key=0, checkpoint_every=0,
+                       checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="simulator"):
+        run_experiment(dataclasses.replace(spec, substrate="mesh"), key=0,
+                       checkpoint_every=1, checkpoint_dir=str(tmp_path))
+    folds = dataclasses.replace(
+        spec, problem=dataclasses.replace(spec.problem, n_folds=2))
+    with pytest.raises(ValueError, match="n_folds"):
+        run_experiment(folds, key=0, checkpoint_every=1,
+                       checkpoint_dir=str(tmp_path))
