@@ -52,6 +52,7 @@ def main() -> None:
                                          bench_consensus, bench_kernels)
     from benchmarks.system_bench import bench_system
     from benchmarks.serving_bench import bench_serving
+    from benchmarks.scale_bench import bench_scale
 
     t0 = time.time()
     engine_rows = bench_altgdmin_engine(quick=args.quick)
@@ -64,6 +65,8 @@ def main() -> None:
     emit("system_dropout", system_rows, args.out)
     serving_rows = bench_serving(quick=args.quick)
     emit("serving_throughput", serving_rows, args.out)
+    scale_rows = bench_scale(quick=args.quick)
+    emit("scale_nodes", scale_rows, args.out)
     bench_json = {
         "benchmark": "altgdmin_engine",
         "description": "fused node-batched AltGDmin iteration engine: "
@@ -114,6 +117,19 @@ def main() -> None:
                            "as fresher checkpoints publish, "
                            "section=drifting)",
             "rows": serving_rows,
+        },
+        "scale": {
+            "description": "sparse consensus path at large L: a full "
+                           "dif_altgdmin run through the runner on the "
+                           "sparse simulator substrate at L=100k "
+                           "(quick: 10k) over a Barabási–Albert graph "
+                           "— µs/outer-iter + peak RSS + edge count "
+                           "(section=large_L), the sparse segment-sum "
+                           "vs dense stacked-matmul mix crossover "
+                           "(section=sparse_vs_dense), and RCM "
+                           "shift-count pruning of the mesh "
+                           "decomposition (section=rcm)",
+            "rows": scale_rows,
         },
     }
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

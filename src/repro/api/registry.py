@@ -36,7 +36,9 @@ class SolverDef:
     central: gather + broadcast/iter).  ``mesh_capable`` marks solvers
     with a shard_map runtime.  ``spec_kwargs`` lists extra SolverSpec
     fields the driver consumes (forwarded by the runner, e.g.
-    ``local_steps`` for ``beyond_central``).
+    ``local_steps`` for ``beyond_central``).  ``virtual_mesh_fn`` is the
+    virtual-node mesh runtime (L = devices × block; the runner
+    dispatches to it when L is a multiple of the device count).
     """
     name: str
     fn: Callable
@@ -46,6 +48,7 @@ class SolverDef:
     mesh_fn: Callable | None = None  # shard_map runtime, if one exists
     spec_kwargs: tuple = ()          # extra SolverSpec fields fn takes
     takes_avail: bool = False        # consumes a (T_GD, L) avail mask
+    virtual_mesh_fn: Callable | None = None  # virtual-node mesh runtime
 
     @property
     def mesh_capable(self) -> bool:
@@ -109,7 +112,8 @@ def solver_names() -> tuple[str, ...]:
 register_solver(SolverDef(
     name="dif_altgdmin", fn=_alg.dif_altgdmin,
     topology="W", combine="gossip",
-    mesh_fn=_runtime.dif_altgdmin_mesh))
+    mesh_fn=_runtime.dif_altgdmin_mesh,
+    virtual_mesh_fn=_runtime.dif_altgdmin_virtual_mesh))
 
 register_solver(SolverDef(
     name="dec_altgdmin", fn=_alg.dec_altgdmin,

@@ -43,7 +43,7 @@ from repro.core.problem import (MTRLProblem, generate_problem, node_view,
                                 split_samples)
 from repro.core.spectral import SpectralInit, decentralized_spectral_init
 from repro.distributed import consensus as _consensus
-from repro.distributed.graphs import Graph
+from repro.distributed.graphs import Graph, SparseGraph
 from repro.utils.compat import make_mesh
 
 
@@ -53,13 +53,19 @@ _COMM_MODELS = {"ethernet-1gbps": _cm.ETHERNET_1GBPS,
 
 @dataclasses.dataclass(frozen=True)
 class Materialized:
-    """The spec's liturgy, executed: everything a solver call needs."""
+    """The spec's liturgy, executed: everything a solver call needs.
+
+    On the sparse representation (``TopologySpec.use_sparse``) ``W`` is
+    a :class:`~repro.distributed.mixing.SparseWeights` and ``adj`` the
+    :class:`~repro.distributed.graphs.SparseGraph` itself — nothing
+    (L, L)-shaped is ever materialized; the consensus layer lowers both
+    to padded segment-sum rounds."""
     problem: MTRLProblem
     Xg: jax.Array
     yg: jax.Array
-    graph: Graph
-    W: jax.Array
-    adj: jax.Array
+    graph: Graph | SparseGraph
+    W: jax.Array                 # or SparseWeights (sparse representation)
+    adj: jax.Array               # or SparseGraph  (sparse representation)
     init: SpectralInit
     eta: float
 
@@ -116,8 +122,14 @@ def materialize(spec: ExperimentSpec, key=None) -> Materialized:
         prob = split_samples(prob, p.n_folds)
     Xg, yg = node_view(prob)
     graph = spec.topology.build_graph(p.L)
-    W = jnp.asarray(spec.topology.build_weights(p.L, graph), dtype)
-    adj = jnp.asarray(graph.adj, dtype)
+    if spec.topology.use_sparse(p.L, graph):
+        sg = graph if isinstance(graph, SparseGraph) else graph.to_sparse()
+        graph = sg
+        W = spec.topology.build_sparse_weights(p.L, sg)
+        adj = sg
+    else:
+        W = jnp.asarray(spec.topology.build_weights(p.L, graph), dtype)
+        adj = jnp.asarray(graph.adj, dtype)
     init = decentralized_spectral_init(
         jax.random.fold_in(key, 1), Xg_init, yg_init, W, kappa=prob.kappa,
         mu=prob.mu, r=p.r, T_pm=spec.init.T_pm, T_con=spec.init.T_con,
@@ -202,7 +214,7 @@ def system_time_axis(spec: ExperimentSpec, solver: SolverDef, graph: Graph,
     entries = sig.entries_per_round
     return _sysclock.simulated_time_axis(
         avail=avail, rounds_per_iter=sig.rounds_per_iter,
-        adj=np.asarray(graph.adj), model=model,
+        neighbors=graph.neighbor_lists(), model=model,
         compute_s_per_iter=compute, speeds=s.node_speeds(p.L),
         straggler_prob=s.straggler_prob,
         straggler_factor=s.straggler_factor,
@@ -375,8 +387,13 @@ def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
                          "splitting (n_folds > 1)")
     n_dev = jax.device_count()
     if p.L != n_dev:
+        if (solver.virtual_mesh_fn is not None and n_dev >= 1
+                and p.L % n_dev == 0 and avail is None):
+            return _run_virtual_mesh(spec, solver, mat, eng, eta, n_dev)
         raise ValueError(f"substrate='mesh' needs one device per node: "
-                         f"L={p.L} but {n_dev} devices are available")
+                         f"L={p.L} but {n_dev} devices are available "
+                         f"(the virtual-node tier needs a solver with a "
+                         f"virtual mesh runtime and n_dev | L)")
     mesh = make_mesh((p.L,), ("nodes",))
     kw = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
     if avail is not None:
@@ -396,3 +413,24 @@ def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
         mat.init.U0, mat.Xg, mat.yg, mesh, "nodes", eta=eta,
         T_GD=spec.solver.T_GD, T_con=spec.solver.T_con,
         engine=eng, U_star=mat.problem.U_star, **kw)
+
+
+def _run_virtual_mesh(spec: ExperimentSpec, solver: SolverDef,
+                      mat: Materialized, eng, eta: float,
+                      n_dev: int) -> RunResult:
+    """The virtual-node mesh tier: L = n_dev × block, contiguous blocks
+    of virtual nodes per device — co-located gossip is an on-device
+    segment-sum, only cross-device edge classes pay collective-permutes.
+    Any mixing matrix (dense or SparseWeights) decomposes; the W is the
+    SAME one the simulator mixes with, so trajectories agree to the
+    consensus layer's parity tolerance."""
+    from repro.distributed.mixing import SparseWeights
+    W = mat.W
+    if not isinstance(W, SparseWeights):
+        W = SparseWeights.from_dense(np.asarray(W))
+    vt = _consensus.VirtualTopology.from_weights(W, n_dev)
+    mesh = make_mesh((n_dev,), ("nodes",))
+    return solver.virtual_mesh_fn(
+        mat.init.U0, mat.Xg, mat.yg, mesh, "nodes", vt=vt, eta=eta,
+        T_GD=spec.solver.T_GD, T_con=spec.solver.T_con,
+        engine=eng, U_star=mat.problem.U_star)

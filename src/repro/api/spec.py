@@ -34,8 +34,10 @@ from repro.distributed import mixing as _mixing
 
 
 GRAPH_FAMILIES = ("erdos_renyi", "ring", "path", "torus2d", "hypercube",
-                  "complete", "star", "circulant")
+                  "complete", "star", "circulant", "barabasi_albert",
+                  "hierarchical", "cluster_cliques")
 WEIGHT_SCHEMES = ("metropolis", "equal_neighbor", "lazy", "circulant")
+REPRESENTATIONS = ("auto", "dense", "sparse")
 SUBSTRATES = ("simulator", "mesh")
 COMM_MODELS = ("ethernet-1gbps", "tpu-ici")
 AVAILABILITY_KINDS = ("always", "bernoulli", "markov")
@@ -71,6 +73,15 @@ class TopologySpec:
     other schemes run on the mesh too — the consensus layer decomposes
     their W into per-shift, per-device weights (one permute per distinct
     cyclic shift of the sparsity pattern).
+
+    The scale families: ``barabasi_albert`` (``ba_m`` attachments per
+    new node), ``hierarchical`` (``branching``-ary tree), and
+    ``cluster_cliques`` (pods of ``clique`` nodes on a bridge ring) are
+    sparse-born — no (L, L) allocation at any size.  ``representation``
+    picks the mixing-matrix lowering: ``"auto"`` (default) takes the
+    sparse path above the consensus layer's node-count/density cutoff,
+    ``"sparse"``/``"dense"`` force it (the parity tests force both on
+    the same small graph).
     """
     family: str = "erdos_renyi"
     p: float = 0.5
@@ -78,10 +89,14 @@ class TopologySpec:
     rows: int = 0
     cols: int = 0
     dim: int = 0
+    ba_m: int = 2                          # barabasi_albert attachments
+    branching: int = 4                     # hierarchical tree arity
+    clique: int = 8                        # cluster_cliques pod size
     weights: str = "metropolis"
     beta: float = 0.5                      # lazy weights
     shifts: tuple = (-1, 1)                # circulant weights
     self_weight: Optional[float] = None    # circulant weights
+    representation: str = "auto"
 
     def __post_init__(self):
         if self.family not in GRAPH_FAMILIES:
@@ -90,6 +105,10 @@ class TopologySpec:
         if self.weights not in WEIGHT_SCHEMES:
             raise ValueError(f"unknown weight scheme {self.weights!r}; "
                              f"expected one of {WEIGHT_SCHEMES}")
+        if self.representation not in REPRESENTATIONS:
+            raise ValueError(f"unknown representation "
+                             f"{self.representation!r}; expected one of "
+                             f"{REPRESENTATIONS}")
         # JSON round-trips tuples as lists; normalize back.
         object.__setattr__(self, "shifts", tuple(self.shifts))
         # Circulant weights gossip over the circulant graph of `shifts`;
@@ -127,19 +146,53 @@ class TopologySpec:
             return _graphs.complete(L)
         if self.family == "circulant":
             return _graphs.circulant(L, self.shifts)
+        if self.family == "barabasi_albert":
+            return _graphs.barabasi_albert(L, m=self.ba_m, seed=self.seed)
+        if self.family == "hierarchical":
+            return _graphs.hierarchical(L, branching=self.branching)
+        if self.family == "cluster_cliques":
+            return _graphs.cluster_of_cliques(L, clique=self.clique,
+                                              seed=self.seed)
         return _graphs.star(L)
+
+    def use_sparse(self, L: int, graph=None) -> bool:
+        """Whether this topology takes the sparse consensus lowering:
+        forced by ``representation``, or (auto) the consensus layer's
+        node-count/density cutoff."""
+        from repro.distributed.consensus import (SPARSE_DENSITY_THRESHOLD,
+                                                 SPARSE_MIN_NODES)
+        if self.representation != "auto":
+            return self.representation == "sparse"
+        g = graph if graph is not None else self.build_graph(L)
+        return L >= SPARSE_MIN_NODES and g.density <= SPARSE_DENSITY_THRESHOLD
 
     def build_weights(self, L: int,
                       graph: _graphs.Graph | None = None) -> np.ndarray:
-        """The (L, L) mixing matrix W for the AGREE protocol."""
+        """The dense (L, L) mixing matrix W for the AGREE protocol."""
         if self.weights == "circulant":
             return _mixing.circulant_weights(L, self.shifts, self.self_weight)
         g = graph if graph is not None else self.build_graph(L)
+        if isinstance(g, _graphs.SparseGraph):
+            g = g.to_dense()
         if self.weights == "metropolis":
             return _mixing.metropolis_weights(g)
         if self.weights == "equal_neighbor":
             return _mixing.equal_neighbor_weights(g)
         return _mixing.lazy_weights(g, self.beta)
+
+    def build_sparse_weights(self, L: int, graph=None
+                             ) -> _mixing.SparseWeights:
+        """The same mixing matrix in :class:`SparseWeights` form — the
+        O(E) path, never allocating (L, L)."""
+        if self.weights == "circulant":
+            return _mixing.circulant_weights_sparse(L, self.shifts,
+                                                    self.self_weight)
+        g = graph if graph is not None else self.build_graph(L)
+        if self.weights == "metropolis":
+            return _mixing.metropolis_weights_sparse(g)
+        if self.weights == "equal_neighbor":
+            return _mixing.equal_neighbor_weights_sparse(g)
+        return _mixing.lazy_weights_sparse(g, self.beta)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -55,24 +55,51 @@ def agree_round_time(d: int, r: int, max_deg: int, model: NetworkModel,
     return max(times) if parallel else sum(times)
 
 
+def agree_round_time_degrees(d: int, r: int, degrees, model: NetworkModel,
+                             rng: np.random.Generator | None = None, *,
+                             n_entries: int | None = None,
+                             bytes_per_entry: int | None = None) -> float:
+    """Degree-weighted gossip round: node g exchanges ``degrees[g]``
+    messages — one per incident edge, Σ_g deg_g = 2·|E| wire messages
+    total, derived from the (sparse) edge set instead of a uniform
+    ``max_deg`` assumption — and the synchronous round barrier is the
+    max over every message."""
+    n = d * r if n_entries is None else n_entries
+    t = 0.0
+    for deg in degrees:
+        for _ in range(int(deg)):
+            t = max(t, model.message_time(n, rng,
+                                          bytes_per_entry=bytes_per_entry))
+    return t
+
+
 def decentralized_time_axis(n_iters: int, T_con: int, d: int, r: int,
                             max_deg: int, compute_time_per_iter: float,
                             model: NetworkModel = ETHERNET_1GBPS,
                             seed: int = 0, *, n_entries: int | None = None,
                             bytes_per_entry: int | None = None,
-                            rng: np.random.Generator | None = None
-                            ) -> np.ndarray:
+                            rng: np.random.Generator | None = None,
+                            degrees=None) -> np.ndarray:
     """Cumulative wall-clock after each outer iteration for a decentralized
     run: per iteration, T_con gossip rounds + local compute.  ``rng``
     threads a caller-seeded generator (e.g. ``CommSpec.rng()``) through
     every jitter draw; without one, ``seed`` builds it here — either way
-    the axis is reproducible."""
+    the axis is reproducible.  ``degrees`` (per-node, from the graph's
+    edge set) switches the round pricing to the degree-weighted message
+    count of :func:`agree_round_time_degrees`."""
     rng = np.random.default_rng(seed) if rng is None else rng
+
+    def round_time():
+        if degrees is not None:
+            return agree_round_time_degrees(
+                d, r, degrees, model, rng, n_entries=n_entries,
+                bytes_per_entry=bytes_per_entry)
+        return agree_round_time(d, r, max_deg, model, rng,
+                                n_entries=n_entries,
+                                bytes_per_entry=bytes_per_entry)
+
     per_iter = np.array([
-        sum(agree_round_time(d, r, max_deg, model, rng, n_entries=n_entries,
-                             bytes_per_entry=bytes_per_entry)
-            for _ in range(T_con))
-        + compute_time_per_iter
+        sum(round_time() for _ in range(T_con)) + compute_time_per_iter
         for _ in range(n_iters)])
     return np.cumsum(per_iter)
 
@@ -81,8 +108,8 @@ def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
                              max_deg: int, compute_s_per_iter: float,
                              model: NetworkModel = ETHERNET_1GBPS,
                              seed: int = 0, *,
-                             rng: np.random.Generator | None = None
-                             ) -> np.ndarray:
+                             rng: np.random.Generator | None = None,
+                             degrees=None) -> np.ndarray:
     """Price a solver's wall-clock axis from its CombineRule
     :class:`~repro.distributed.consensus.CommSignature`: ``"central"``
     is a gather + broadcast per iteration, ``"none"`` is compute only,
@@ -92,7 +119,11 @@ def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
     exchange at the model's native precision, so compressed combine
     rules price their actual wire format.  ``rng`` threads one seeded
     generator through every jitter draw (``seed`` builds one
-    otherwise)."""
+    otherwise).  ``degrees`` prices each round's message count from the
+    graph's edge set (2·|E| messages, degree-weighted) instead of the
+    uniform ``max_deg`` — dense and sparse representations of the same
+    graph report identical degrees, so their axes agree draw for draw
+    (the pricing-consistency regression)."""
     if sig.pattern == "central":
         return centralized_time_axis(n_iters, d, r, L, compute_s_per_iter,
                                      model=model, seed=seed, rng=rng)
@@ -102,7 +133,8 @@ def time_axis_from_signature(sig, n_iters: int, d: int, r: int, L: int,
         n_iters, sig.rounds_per_iter, d, r, max_deg, compute_s_per_iter,
         model=model, seed=seed, rng=rng,
         n_entries=getattr(sig, "entries_per_round", None),
-        bytes_per_entry=getattr(sig, "bytes_per_entry", None))
+        bytes_per_entry=getattr(sig, "bytes_per_entry", None),
+        degrees=degrees)
 
 
 def centralized_time_axis(n_iters: int, d: int, r: int, L: int,

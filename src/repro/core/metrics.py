@@ -28,8 +28,23 @@ def task_error(theta_hat, theta_star):
     return jnp.max(num / den)
 
 
+# Above this node count the exact pairwise diameter is replaced by the
+# O(L·d·r) consensus radius (max deviation from the node mean).  The
+# exact form's fused reduction still materializes an (L, L) norm buffer
+# — 40 GB at L=100k — which would defeat the sparse consensus path.
+SPREAD_EXACT_MAX = 4096
+
+
 def consensus_spread(U_nodes):
     """max_{g,g'} ||U_g − U_g'||_F over the node axis (UconsErr of Sec. IV).
-    U_nodes: (L, d, r)."""
-    diff = U_nodes[:, None] - U_nodes[None, :]
-    return jnp.max(jnp.sqrt(jnp.sum(diff ** 2, axis=(-2, -1))))
+    U_nodes: (L, d, r).
+
+    Above ``SPREAD_EXACT_MAX`` nodes this returns the consensus *radius*
+    ``max_g ||U_g − Ū||_F`` instead of the pairwise diameter — the same
+    quantity within a factor of 2 (radius ≤ diameter ≤ 2·radius) at
+    O(L·d·r) memory instead of O(L²)."""
+    if U_nodes.shape[0] <= SPREAD_EXACT_MAX:
+        diff = U_nodes[:, None] - U_nodes[None, :]
+        return jnp.max(jnp.sqrt(jnp.sum(diff ** 2, axis=(-2, -1))))
+    dev = U_nodes - jnp.mean(U_nodes, axis=0, keepdims=True)
+    return jnp.max(jnp.sqrt(jnp.sum(dev ** 2, axis=(-2, -1))))

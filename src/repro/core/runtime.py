@@ -205,6 +205,77 @@ def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                           backend=backend, U_star=U_star)
 
 
+def dif_altgdmin_virtual_mesh(U0, Xg, yg, mesh, axis_name: str, *, vt,
+                              eta: float, T_GD: int, T_con: int,
+                              engine: AltgdminEngine | None = None,
+                              backend: str | None = None, U_star=None):
+    """Algorithm 3 on the VIRTUAL-NODE mesh tier: L = devices × block
+    nodes, each device holding a contiguous (block, d, r) slab of
+    iterates and the matching data shard.  The local min-B/gradient
+    phases run node-batched through the engine exactly like the
+    simulator (a device IS a small simulator over its block); the
+    combine phase is the
+    :class:`~repro.distributed.consensus.VirtualTopology` lowering —
+    co-located gossip as an on-device segment-sum shuffle, one
+    collective-permute per cross-device edge class.  ``vt`` carries the
+    decomposed mixing matrix (``VirtualTopology.from_weights``).
+    Federated structure is preserved: only the (block, d, r) iterate
+    slab crosses the wire, never data."""
+    from repro.core.altgdmin import RunResult
+
+    D = mesh.shape[axis_name]
+    L = U0.shape[0]
+    if vt.n_dev != D or vt.n_nodes != L:
+        raise ValueError(f"VirtualTopology is {vt.n_dev} dev × {vt.block} "
+                         f"block but the run has {D} devices and L={L}")
+    eta_L = eta * L
+    eng = resolve_engine(engine, backend)
+    mixer = get_rule("gossip").make_virtual_mesh_mixer(
+        axis_name, vt, T_con, backend=eng.backend)
+    with_metrics = U_star is not None
+
+    def body(U0b, Xb, yb, U_star_):
+        # U0b: (V, d, r) — this device's block of virtual nodes
+        def step(carry, _):
+            U = carry
+            _, G = eng.min_grad(U, Xb, yb, Xb, yb, same_data=True)
+            U_breve = U - eta_L * G                  # local adapt
+            U_tilde = mixer(U_breve)                 # combine (diffusion)
+            U_new = jax.vmap(lambda u: _qr_pos(u)[0])(U_tilde)
+            if not with_metrics:
+                return U_new, None
+            sd = jax.vmap(lambda u: subspace_distance(u, U_star_))(U_new)
+            U_all = jax.lax.all_gather(U_new, axis_name)   # (D, V, d, r)
+            spread = consensus_spread(
+                U_all.reshape(L, *U_all.shape[2:]))
+            return U_new, (sd, spread)
+
+        U_fin, metrics = jax.lax.scan(step, U0b, None, length=T_GD)
+        B_fin = eng.minimize_B(U_fin, Xb, yb)
+        if not with_metrics:
+            return U_fin, B_fin
+        sd, spread = metrics                         # (T, V), (T,)
+        return U_fin, B_fin, sd[None], spread[None]
+
+    sharded = P(axis_name)
+    out_specs = ((sharded,) * 4) if with_metrics else (sharded, sharded)
+    run = _shard_map(body, mesh=mesh,
+                     in_specs=(sharded, sharded, sharded, P()),
+                     out_specs=out_specs,
+                     axis_names={axis_name},
+                     check_rep=not eng.fused)
+
+    U_dummy = U0[0] if U_star is None else U_star
+    out = run(U0, Xg, yg, U_dummy)
+    if not with_metrics:
+        return out
+    U_fin, B_fin, sd, spread = out       # sd: (D, T_GD, V), spread: (D, T)
+    return RunResult(U_nodes=U_fin, B_nodes=B_fin,
+                     sd_max=jnp.max(sd, axis=(0, 2)),
+                     sd_mean=jnp.mean(sd, axis=(0, 2)),
+                     spread=spread[0], eta=eta)
+
+
 def dec_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                       T_GD: int, T_con: int,
                       shifts=(-1, 1), self_weight=None, W=None,

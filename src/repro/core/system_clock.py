@@ -102,33 +102,45 @@ def _iteration_seconds(live, neighbors, rounds: int, compute, model,
 
 
 def simulated_time_axis(*, avail: np.ndarray, rounds_per_iter: int,
-                        adj: np.ndarray, model: NetworkModel,
+                        adj: np.ndarray | None = None,
+                        model: NetworkModel,
                         compute_s_per_iter: float,
                         speeds: np.ndarray | None = None,
                         straggler_prob: float = 0.0,
                         straggler_factor: float = 1.0,
                         n_entries: int, bytes_per_entry: int | None = None,
                         rng: np.random.Generator | None = None,
-                        send_fraction: np.ndarray | None = None
-                        ) -> np.ndarray:
+                        send_fraction: np.ndarray | None = None,
+                        neighbors=None) -> np.ndarray:
     """Cumulative simulated seconds after each outer iteration.
 
     ``avail``: (T_GD, L) bool availability mask (the SAME array the
     dropout-tolerant solvers consume, so time and trajectory see one
-    fault schedule); ``adj``: (L, L) 0/1 adjacency; ``speeds``: per-node
+    fault schedule); ``adj``: (L, L) 0/1 adjacency, or pass ``neighbors``
+    (per-node neighbour-id lists, e.g. ``SparseGraph.neighbor_lists()``)
+    to avoid densifying a large sparse topology; ``speeds``: per-node
     compute multipliers; ``send_fraction``: optional (T_GD,) measured
     per-iteration send rate (the event rule's telemetry) replacing the
     static always-send pricing.  ``rng`` drives jitter, stragglers and
     send coin-flips — pass a seeded generator for reproducible axes.
     """
     avail = np.asarray(avail, dtype=bool)
-    adj = np.asarray(adj)
     n_iters, L = avail.shape
-    if adj.shape != (L, L):
-        raise ValueError(f"adjacency {adj.shape} does not match the "
-                         f"mask's {L} nodes")
+    if neighbors is not None:
+        if len(neighbors) != L:
+            raise ValueError(f"neighbor lists cover {len(neighbors)} nodes "
+                             f"but the mask has {L}")
+        all_nbrs = [list(map(int, ns)) for ns in neighbors]
+    else:
+        if adj is None:
+            raise ValueError("simulated_time_axis needs either adj or "
+                             "neighbors")
+        adj = np.asarray(adj)
+        if adj.shape != (L, L):
+            raise ValueError(f"adjacency {adj.shape} does not match the "
+                             f"mask's {L} nodes")
+        all_nbrs = [np.nonzero(adj[g])[0].tolist() for g in range(L)]
     speeds = np.ones(L) if speeds is None else np.asarray(speeds, float)
-    all_nbrs = [np.nonzero(adj[g])[0].tolist() for g in range(L)]
 
     out = np.empty(n_iters)
     total = 0.0

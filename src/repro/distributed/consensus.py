@@ -92,6 +92,26 @@ class CommSignature:
             return int(2 * (n_nodes - 1) / n_nodes * n * bpe)
         return int(self.rounds_per_iter * degree * n * bpe)
 
+    def network_bytes_per_iter(self, n_entries: int, itemsize: int, *,
+                               n_nodes: int, n_edges: int) -> int:
+        """TOTAL bytes the whole network moves per outer iteration,
+        derived from the graph's edge set (degree-weighted: one message
+        per directed edge per round, Σ_g deg_g = 2·|E|) — NOT from an
+        L² all-pairs assumption.  Dense and sparse representations of
+        the same graph report the same ``n_edges``, so they price
+        identically (the consistency regression); the scale benchmark
+        reports this next to per-node :meth:`bytes_per_iter`."""
+        n = (self.entries_per_round if self.entries_per_round is not None
+             else n_entries)
+        bpe = (self.bytes_per_entry if self.bytes_per_entry is not None
+               else itemsize)
+        if self.pattern == "none" or self.rounds_per_iter == 0:
+            return 0
+        if self.pattern == "central":
+            # L uploads + L downloads of the iterate
+            return int(2 * n_nodes * n * bpe)
+        return int(self.rounds_per_iter * 2 * n_edges * n * bpe)
+
 
 # ----------------------------------------------------------------------
 # the combine primitives every lowering bottoms out in
@@ -130,10 +150,16 @@ def combine_blocks(z, neighbors: Sequence[jax.Array], weights, *,
     return acc.astype(z.dtype)
 
 
-def stacked_product(Z: jax.Array, W: jax.Array, T_con: int) -> jax.Array:
+def stacked_product(Z: jax.Array, W, T_con: int) -> jax.Array:
     """The exact sequential simulator product: T_con rounds of ``W @ Z``
     over the leading node axis, dtype-preserving (the seed's ``agree``
-    math — every other lowering is validated against this)."""
+    math — every other lowering is validated against this).  ``W`` may
+    be a :class:`~repro.distributed.mixing.SparseWeights`, in which case
+    each round is the padded-COO segment-sum of
+    :func:`stacked_sparse_product` instead of a dense matmul."""
+    from repro.distributed.mixing import SparseWeights
+    if isinstance(W, SparseWeights):
+        return stacked_sparse_product(Z, W, T_con)
     if T_con == 0:
         return Z
     W = W.astype(Z.dtype)
@@ -146,15 +172,130 @@ def stacked_product(Z: jax.Array, W: jax.Array, T_con: int) -> jax.Array:
     return out.reshape(Z.shape)
 
 
-def stacked_dense_mix(Z: jax.Array, M: jax.Array, *, backend: str):
-    """Single dense combine ``Z ← M Z`` for a precomputed mixer (e.g.
+def stacked_dense_mix(Z: jax.Array, M, *, backend: str):
+    """Single combine ``Z ← M Z`` for a precomputed mixer (e.g.
     ``W^{T_con}``): fused ``mix_rows`` on the pallas backends, einsum on
-    xla-ref/f64."""
+    xla-ref/f64.  A :class:`SparseWeights` mixer takes the segment-sum
+    lowering instead (one sparse round, any backend)."""
+    from repro.distributed.mixing import SparseWeights
     from repro.kernels import ops
+    if isinstance(M, SparseWeights):
+        return stacked_sparse_product(Z, M, 1)
     if _fused_wanted(backend, Z.dtype):
         return ops.mix_nodes(Z, M.astype(jnp.float32),
                              backend=backend).astype(Z.dtype)
     return jnp.einsum("gh,h...->g...", M.astype(Z.dtype), Z)
+
+
+# ----------------------------------------------------------------------
+# sparse simulator lowering
+# ----------------------------------------------------------------------
+#
+# Above a node-count/density cutoff the (L, L) mixing matrix is pure
+# overhead: every combine rule can lower to "gather sender rows by
+# col_idx, weight, segment-sum into receivers" on the padded edge list a
+# SparseWeights carries.  The edge arrays are padded to a multiple of
+# _SPARSE_PAD entries so nearby sizes share compiled executables; the
+# padding entries point at dummy segment L with weight exactly 0.0, so
+# they are arithmetically invisible (the padding-neutrality test pins
+# this).  Edges are CSR-sorted by receiver row with the padding at the
+# end, so ``segment_sum(..., indices_are_sorted=True)`` is valid.
+
+SPARSE_MIN_NODES = 512
+SPARSE_DENSITY_THRESHOLD = 0.25
+_SPARSE_PAD = 1024
+
+
+def maybe_sparsify(W):
+    """Auto-select the sparse simulator lowering for a concrete dense
+    mixing matrix: above :data:`SPARSE_MIN_NODES` nodes AND at or below
+    :data:`SPARSE_DENSITY_THRESHOLD` off-diagonal density, return the
+    equivalent :class:`~repro.distributed.mixing.SparseWeights`;
+    otherwise (small L, dense graph, traced operand, or anything that
+    is not a square matrix) return ``W`` unchanged.  An explicit
+    ``SparseWeights`` input passes straight through — a caller that
+    built one has already chosen the representation."""
+    from repro.distributed.mixing import SparseWeights
+    if isinstance(W, SparseWeights) or W is None:
+        return W
+    if isinstance(W, jax.core.Tracer):
+        return W
+    try:
+        Wn = np.asarray(W)
+    except Exception:
+        return W
+    if Wn.ndim != 2 or Wn.shape[0] != Wn.shape[1]:
+        return W
+    L = Wn.shape[0]
+    if L < SPARSE_MIN_NODES or L < 2:
+        return W
+    off = np.count_nonzero(Wn) - np.count_nonzero(np.diag(Wn))
+    if off / (L * (L - 1)) > SPARSE_DENSITY_THRESHOLD:
+        return W
+    return SparseWeights.from_dense(Wn)
+
+
+def _padded_coo(rows, cols, vals, n: int):
+    """Pad host COO arrays to a multiple of :data:`_SPARSE_PAD` entries:
+    padding rows point at dummy segment ``n``, padding cols at 0, and
+    padding weights are exactly 0.0."""
+    nnz = int(vals.size)
+    total = max(_SPARSE_PAD,
+                -(-nnz // _SPARSE_PAD) * _SPARSE_PAD)
+    pad = total - nnz
+    return (np.concatenate([rows, np.full(pad, n, np.int32)]),
+            np.concatenate([cols, np.zeros(pad, np.int32)]),
+            np.concatenate([vals, np.zeros(pad)]))
+
+
+def _sparse_arrays(sw):
+    """(rows, cols, vals, diag) padded host arrays of a SparseWeights —
+    the static operands every sparse mixer closes over."""
+    rows, cols, vals = _padded_coo(sw.rows, sw.cols, sw.vals, sw.n)
+    return rows, cols, vals, sw.diag
+
+
+def sparse_round(Zf, rows, cols, vals, diag, L: int):
+    """ONE ``Z ← W Z`` on the padded edge list, ``Zf: (L, F)``: gather
+    sender rows by ``cols``, weight, ``segment_sum`` into receiver rows
+    (dummy segment L absorbs the padding), then add the separate
+    diagonal term.  ``vals``/``diag`` must already be in ``Zf.dtype``
+    (the caller casts once, mirroring ``stacked_product``'s
+    ``W.astype``)."""
+    gathered = vals[:, None] * Zf[cols]
+    acc = jax.ops.segment_sum(gathered, rows, num_segments=L + 1,
+                              indices_are_sorted=True)
+    return acc[:L] + diag[:, None] * Zf
+
+
+def sparse_offdiag_apply(Zf, rows, cols, vals, L: int):
+    """The off-diagonal half of :func:`sparse_round` — ``(W − diag) Z``
+    — for combines that treat the self term specially (the compressed
+    rules' exact-self correction)."""
+    gathered = vals[:, None] * Zf[cols]
+    acc = jax.ops.segment_sum(gathered, rows, num_segments=L + 1,
+                              indices_are_sorted=True)
+    return acc[:L]
+
+
+def stacked_sparse_product(Z: jax.Array, sw, T_con: int) -> jax.Array:
+    """T_con sequential rounds of the sparse ``Z ← W Z`` — the sparse
+    twin of :func:`stacked_product`, dtype-preserving (weights cast to
+    ``Z.dtype`` exactly like the dense path's ``W.astype``)."""
+    if T_con == 0:
+        return Z
+    L = sw.n
+    rows, cols, vals, diag = _sparse_arrays(sw)
+    rows, cols = jnp.asarray(rows), jnp.asarray(cols)
+    vals = jnp.asarray(vals, Z.dtype)
+    diag = jnp.asarray(diag, Z.dtype)
+    flat = Z.reshape(L, -1)
+
+    def body(carry, _):
+        return sparse_round(carry, rows, cols, vals, diag, L), None
+
+    out, _ = jax.lax.scan(body, flat, None, length=T_con)
+    return out.reshape(Z.shape)
 
 
 def node_mean(Z: jax.Array) -> jax.Array:
@@ -169,7 +310,16 @@ def neighbor_average_matrix(adj):
     """DGD's row-stochastic neighbour average M = D⁻¹A (zero diagonal,
     isolated nodes guarded to degree 1).  ONE derivation shared by the
     simulator driver and the mesh lowering — their ≤1e-7 parity depends
-    on both sides using the same matrix."""
+    on both sides using the same matrix.  A
+    :class:`~repro.distributed.graphs.SparseGraph` adjacency yields the
+    equivalent :class:`SparseWeights` (same per-edge 1/deg values,
+    never densified)."""
+    from repro.distributed.graphs import Graph, SparseGraph
+    from repro.distributed.mixing import neighbor_average_weights_sparse
+    if isinstance(adj, SparseGraph):
+        return neighbor_average_weights_sparse(adj)
+    if isinstance(adj, Graph):
+        adj = jnp.asarray(adj.adj, jnp.float64)
     deg = jnp.maximum(jnp.sum(adj, axis=1), 1.0)
     return adj / deg[:, None]
 
@@ -187,7 +337,13 @@ def mesh_weights_from_matrix(W) -> tuple[tuple[int, ...], np.ndarray]:
     decomposes to the runtime's historical (−1, 1) order.
 
     W must be host-concrete (topology is static metadata, never traced).
+    A :class:`SparseWeights` densifies first (the per-device mesh tier
+    is small-L by construction; the large-L mesh form is
+    :class:`VirtualTopology`).
     """
+    from repro.distributed.mixing import SparseWeights
+    if isinstance(W, SparseWeights):
+        W = W.to_dense()
     try:
         Wn = np.asarray(W)
     except Exception as e:                       # jax TracerConversionError
@@ -206,6 +362,225 @@ def mesh_weights_from_matrix(W) -> tuple[tuple[int, ...], np.ndarray]:
     for k, s in enumerate(shifts):
         table[:, k + 1] = Wn[idx, (idx + s) % L]
     return tuple(shifts), table
+
+
+@dataclasses.dataclass(frozen=True)
+class RelabeledMeshWeights:
+    """:func:`mesh_weights_from_matrix` after RCM shift-count pruning.
+
+    ``perm`` (new→old) relabels the node axis; ``shifts``/``table``
+    decompose the RELABELED matrix ``W[perm][:, perm]``.  A mesh run
+    permutes its node-major inputs by ``perm`` (device k hosts old node
+    ``perm[k]``), gossips with the pruned shift set, and un-permutes the
+    outputs — the mixing arithmetic is identical (a relabeling is a
+    similarity transform by a permutation matrix).  ``shifts_before`` /
+    ``shifts_after`` report the pruning: each shift is one
+    collective-permute per gossip round on the mesh runtime.
+    """
+    perm: np.ndarray
+    shifts: tuple
+    table: np.ndarray
+    shifts_before: int
+    shifts_after: int
+
+
+def mesh_weights_relabeled(W, *, verify: bool = True
+                           ) -> RelabeledMeshWeights:
+    """Shift-count pruning for :func:`mesh_weights_from_matrix` via
+    bandwidth-reducing node relabeling (reverse Cuthill–McKee on the
+    mixing matrix's support).  An irregular graph's raw decomposition
+    can need up to L−1 distinct cyclic shifts; RCM concentrates the
+    support near the diagonal, so the relabeled matrix decomposes into
+    the few shifts spanned by its bandwidth.  Falls back to the identity
+    relabeling when RCM does not strictly reduce the shift count (e.g.
+    a circulant is already optimal).  ``verify`` asserts round-trip
+    equivalence: the shift table rebuilt densely must equal the
+    relabeled matrix entry for entry, and un-permuting recovers W.
+    """
+    from repro.distributed.graphs import SparseGraph, reverse_cuthill_mckee
+    from repro.distributed.mixing import SparseWeights
+    if isinstance(W, SparseWeights):
+        W = W.to_dense()
+    Wn = np.asarray(W)
+    L = Wn.shape[0]
+    shifts0, table0 = mesh_weights_from_matrix(Wn)
+    off = (Wn != 0) | (Wn != 0).T
+    np.fill_diagonal(off, False)
+    rows, cols = np.nonzero(off)
+    perm = reverse_cuthill_mckee(SparseGraph.from_edges(L, rows, cols))
+    Wp = Wn[np.ix_(perm, perm)]
+    shifts, table = mesh_weights_from_matrix(Wp)
+    if len(shifts) >= len(shifts0):           # pruning didn't help
+        perm, Wp = np.arange(L, dtype=np.int64), Wn
+        shifts, table = shifts0, table0
+    if verify:
+        idx = np.arange(L)
+        R = np.zeros_like(Wp)
+        R[idx, idx] = table[:, 0]
+        for k, s in enumerate(shifts):
+            R[idx, (idx + s) % L] = table[:, k + 1]
+        if not np.array_equal(R, Wp):
+            raise AssertionError("RCM decomposition round-trip failed")
+        inv = np.empty(L, dtype=np.int64)
+        inv[perm] = np.arange(L)
+        if not np.array_equal(Wp[np.ix_(inv, inv)], Wn):
+            raise AssertionError("RCM relabeling round-trip failed")
+    return RelabeledMeshWeights(perm=perm, shifts=tuple(shifts),
+                                table=table, shifts_before=len(shifts0),
+                                shifts_after=len(shifts))
+
+
+# ----------------------------------------------------------------------
+# virtual-node mesh tier
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VirtualTopology:
+    """Device × local-block decomposition of a sparse mixing matrix —
+    the mesh form of the node axis past one-node-per-device.
+
+    Node ``i`` lives on device ``i // block`` as local virtual node
+    ``i % block`` (contiguous blocks).  Every stored edge falls in
+    exactly one DEVICE-shift class ``s = (dev_j − dev_i) mod D`` — the
+    per-edge-class generalization of :func:`mesh_weights_from_matrix`'s
+    per-entry cyclic shifts:
+
+      * class 0 (``local_*``): both endpoints co-located — gossip is a
+        free on-device segment-sum shuffle, no wire traffic;
+      * each nonzero class (``cross_*``, one slot per entry of
+        ``dev_shifts``): ONE ``lax.ppermute`` of the whole local block
+        per round, then a sparse apply at the receiver — only these
+        classes pay priced bytes.
+
+    Edge arrays are padded per device (dummy segment ``block``, weight
+    exactly 0) and sorted by receiver row, so the on-device
+    ``segment_sum`` jits with static shapes; ``diag`` is the separate
+    (D, block) self-weight plane.  Topology is static metadata: all
+    arrays are host numpy.
+    """
+    n_dev: int
+    block: int
+    dev_shifts: tuple[int, ...]
+    local_rows: np.ndarray   # (D, E0) int32 — receiver local row
+    local_cols: np.ndarray   # (D, E0) int32 — sender local row
+    local_vals: np.ndarray   # (D, E0) float64
+    cross_rows: np.ndarray   # (S, D, E1) int32
+    cross_cols: np.ndarray   # (S, D, E1) int32 — sender-local, in the
+    cross_vals: np.ndarray   # (S, D, E1)        permuted block
+    diag: np.ndarray         # (D, block) float64
+
+    @staticmethod
+    def _group(dev, lr, lc, v, D: int, V: int):
+        """Per-device padded (rows, cols, vals) — entries sorted by
+        (device, local row) so segment ids are sorted, padding (row V,
+        weight 0) at the end."""
+        order = np.lexsort((lc, lr, dev))
+        dev, lr, lc, v = dev[order], lr[order], lc[order], v[order]
+        counts = np.bincount(dev, minlength=D)
+        E = max(int(counts.max()) if counts.size else 0, 1)
+        rows = np.full((D, E), V, np.int32)
+        cols = np.zeros((D, E), np.int32)
+        vals = np.zeros((D, E))
+        starts = np.cumsum(counts) - counts
+        pos = np.arange(dev.size) - np.repeat(starts, counts)
+        rows[dev, pos] = lr
+        cols[dev, pos] = lc
+        vals[dev, pos] = v
+        return rows, cols, vals
+
+    @classmethod
+    def from_weights(cls, W, n_dev: int) -> "VirtualTopology":
+        from repro.distributed.mixing import SparseWeights
+        sw = W if isinstance(W, SparseWeights) \
+            else SparseWeights.from_dense(W)
+        L, D = sw.n, int(n_dev)
+        if D < 1 or L % D:
+            raise ValueError(f"virtual-node tier needs n_dev to divide "
+                             f"L, got L={L}, n_dev={D}")
+        V = L // D
+        di = (sw.rows // V).astype(np.int64)
+        dj = (sw.cols // V).astype(np.int64)
+        s = (dj - di) % D
+        ss = np.where(s <= D // 2, s, s - D)
+        lr = (sw.rows % V).astype(np.int64)
+        lc = (sw.cols % V).astype(np.int64)
+        loc = s == 0
+        l_rows, l_cols, l_vals = cls._group(di[loc], lr[loc], lc[loc],
+                                            sw.vals[loc], D, V)
+        shifts = tuple(int(x) for x in np.unique(ss[~loc]))
+        c_rows, c_cols, c_vals = [], [], []
+        for sk in shifts:
+            sel = ss == sk
+            rk, ck, vk = cls._group(di[sel], lr[sel], lc[sel],
+                                    sw.vals[sel], D, V)
+            c_rows.append(rk)
+            c_cols.append(ck)
+            c_vals.append(vk)
+        E1 = max((a.shape[1] for a in c_rows), default=1)
+
+        def stack(arrs, fill, dtype):
+            out = np.full((len(shifts), D, E1), fill, dtype)
+            for k, a in enumerate(arrs):
+                out[k, :, :a.shape[1]] = a
+            return out
+        return cls(
+            n_dev=D, block=V, dev_shifts=shifts,
+            local_rows=l_rows, local_cols=l_cols, local_vals=l_vals,
+            cross_rows=stack(c_rows, V, np.int32),
+            cross_cols=stack(c_cols, 0, np.int32),
+            cross_vals=stack(c_vals, 0.0, np.float64),
+            diag=np.asarray(sw.diag, np.float64).reshape(D, V).copy())
+
+    # -------------------------------------------------------- accounting
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_dev * self.block
+
+    @property
+    def n_local_entries(self) -> int:
+        return int(np.count_nonzero(self.local_rows != self.block))
+
+    @property
+    def n_cross_entries(self) -> int:
+        return int(np.count_nonzero(self.cross_rows != self.block))
+
+    @property
+    def block_sends_per_round(self) -> int:
+        """ppermutes (whole-block sends) one round costs per device —
+        the priced wire traffic; co-located gossip is free."""
+        return len(self.dev_shifts)
+
+
+def virtual_mesh_round(zf, g, vt: VirtualTopology, axis_name: str,
+                       arrays):
+    """One gossip round on the virtual-node tier, ``zf: (V, F)`` this
+    device's flattened block.  ``arrays`` are the device-side copies of
+    vt's edge arrays in ``zf.dtype`` (built once per trace by
+    :func:`virtual_arrays`)."""
+    lr, lc, lv, cr, cc, cv, dg = arrays
+    V, D = vt.block, vt.n_dev
+    acc = dg[g][:, None] * zf
+    acc = acc + jax.ops.segment_sum(
+        lv[g][:, None] * zf[lc[g]], lr[g], num_segments=V + 1,
+        indices_are_sorted=True)[:V]
+    for k, s in enumerate(vt.dev_shifts):
+        perm = [(i, (i - s) % D) for i in range(D)]   # receive from i+s
+        zs = jax.lax.ppermute(zf, axis_name, perm)
+        acc = acc + jax.ops.segment_sum(
+            cv[k][g][:, None] * zs[cc[k][g]], cr[k][g],
+            num_segments=V + 1, indices_are_sorted=True)[:V]
+    return acc
+
+
+def virtual_arrays(vt: VirtualTopology, dtype):
+    """Device-side operands of :func:`virtual_mesh_round` (weights cast
+    once to the iterate dtype)."""
+    return (jnp.asarray(vt.local_rows), jnp.asarray(vt.local_cols),
+            jnp.asarray(vt.local_vals, dtype),
+            jnp.asarray(vt.cross_rows), jnp.asarray(vt.cross_cols),
+            jnp.asarray(vt.cross_vals, dtype),
+            jnp.asarray(vt.diag, dtype))
 
 
 # ----------------------------------------------------------------------
@@ -338,8 +713,12 @@ class GossipCombine(CombineRule):
     name = "gossip"
 
     def make_sim_mixer(self, W, T_con: int, *, backend: str = "xla-ref"):
+        from repro.distributed.mixing import SparseWeights
+        W = maybe_sparsify(W)
         if T_con == 0:
             return lambda Z: Z
+        if isinstance(W, SparseWeights):
+            return self._make_sparse_sim_mixer(W, T_con, backend)
         if backend == "xla-ref":
             return lambda Z: stacked_product(Z, W, T_con)
         Wp = jnp.linalg.matrix_power(W.astype(jnp.float32), T_con)
@@ -349,6 +728,25 @@ class GossipCombine(CombineRule):
                 # f32-accumulating fused kernel: keep x64 runs exact
                 return stacked_product(Z, W, T_con)
             return stacked_dense_mix(Z, Wp, backend=backend)
+        return mix
+
+    @staticmethod
+    def _make_sparse_sim_mixer(sw, T_con: int, backend: str):
+        """Sparse twin of the hoist policy: fused backends precompute
+        ``W^{T_con}`` host-side (scipy CSR power) and apply it in ONE
+        segment-sum round — but only while the power's fill-in stays
+        within :meth:`SparseWeights.power`'s budget; past it (or on
+        xla-ref / f64 operands, which stay sequential-exact) the mixer
+        degrades gracefully to the per-round sparse product."""
+        hoisted = None
+        if backend != "xla-ref" and T_con > 1:
+            hoisted = sw.power(T_con)     # None → fill-in over budget
+
+        def mix(Z):
+            if (hoisted is None or backend == "xla-ref"
+                    or Z.dtype == jnp.float64):
+                return stacked_sparse_product(Z, sw, T_con)
+            return stacked_sparse_product(Z, hoisted, 1)
         return mix
 
     def make_mesh_mixer(self, axis_name, L, T_con, shifts=(-1, 1),
@@ -365,6 +763,31 @@ class GossipCombine(CombineRule):
             return out
         return gossip
 
+    def make_virtual_mesh_mixer(self, axis_name: str,
+                                vt: VirtualTopology, T_con: int, *,
+                                backend: str = "xla-ref") -> Callable:
+        """Per-device closure ``z (V, ...) ↦ z'`` on the virtual-node
+        tier: T_con rounds, each one on-device segment-sum shuffle for
+        the co-located edges plus one ppermute + sparse apply per
+        cross-device shift class.  Always per-round (a ``W^{T_con}``
+        hoist would create new cross-device classes, defeating the
+        decomposition)."""
+        if T_con == 0:
+            return lambda z: z
+
+        def gossip(z):
+            g = jax.lax.axis_index(axis_name)
+            arrays = virtual_arrays(vt, z.dtype)
+            shape = z.shape
+
+            def round_(carry, _):
+                out = virtual_mesh_round(carry, g, vt, axis_name, arrays)
+                return out, None
+            out, _ = jax.lax.scan(round_, z.reshape(vt.block, -1), None,
+                                  length=T_con)
+            return out.reshape(shape)
+        return gossip
+
     def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("gossip", T_con)
 
@@ -377,6 +800,7 @@ class NeighborCombine(CombineRule):
     name = "neighbor"
 
     def make_sim_mixer(self, M, T_con: int = 1, *, backend: str = "xla-ref"):
+        M = maybe_sparsify(M)
         return lambda Z: stacked_dense_mix(Z, M, backend=backend)
 
     def make_mesh_mixer(self, axis_name, L, T_con=1, shifts=(-1, 1),
@@ -606,7 +1030,10 @@ class CompressedGossipCombine(GossipCombine):
         ``Z ← Z + γ(combined − Z)`` — the damping that keeps aggressive
         compression (k ≪ d/4) stable; γ = 1 is a Python-level no-op so
         default trajectories stay bit-identical."""
+        from repro.distributed.mixing import SparseWeights
         gamma = float(kw.pop("consensus_gamma", 1.0))
+        W = maybe_sparsify(W)
+        sparse = isinstance(W, SparseWeights)
         if T_con == 0:
             return lambda Z, state: (Z, state)
 
@@ -614,13 +1041,32 @@ class CompressedGossipCombine(GossipCombine):
             N = Z.shape[0]
             params = self.resolve_params(Z.shape[1], Z.shape[2], **kw)
             ids = jnp.arange(N)
-            w_diag = jnp.diag(jnp.asarray(W)).astype(Z.dtype)[:, None, None]
+            if sparse:
+                rows, cols, vals, diag = _sparse_arrays(W)
+                rows, cols = jnp.asarray(rows), jnp.asarray(cols)
+                vals = jnp.asarray(vals, Z.dtype)
+                w_diag = jnp.asarray(diag, Z.dtype)[:, None, None]
+            else:
+                w_diag = jnp.diag(jnp.asarray(W)) \
+                    .astype(Z.dtype)[:, None, None]
 
             def round_(carry, _):
                 Zc, st = carry
                 xhat, count = st if self._stochastic(**kw) else (st, None)
                 _, xhat2 = self.refresh(Zc, xhat, ids, count,
                                         backend=backend, **params)
+                if sparse:
+                    # exact-self built in: (W − diag) x̂' + diag·Z equals
+                    # the dense W x̂' + diag·(Z − x̂') without the
+                    # add-and-subtract round trip
+                    off = sparse_offdiag_apply(xhat2.reshape(N, -1),
+                                               rows, cols, vals, N)
+                    Z2 = off.reshape(Zc.shape) + w_diag * Zc
+                    if gamma != 1.0:
+                        Z2 = Zc + gamma * (Z2 - Zc)
+                    st2 = ((xhat2, count + 1) if self._stochastic(**kw)
+                           else xhat2)
+                    return (Z2, st2), None
                 if _fused_wanted(backend, Zc.dtype):
                     Z2 = stacked_dense_mix(xhat2, W, backend=backend)
                 else:
@@ -926,6 +1372,43 @@ def push_sum_matrix(W, mask):
     return Wm / jnp.where(c > 0, c, 1.0)[None, :]
 
 
+def _sparse_masked_fold(rows, cols, vals, diag, m, L: int):
+    """Edge-level :func:`masked_mixing_matrix`: a link is live iff BOTH
+    endpoints are (``keep = m_i · m_j`` per stored edge), and a dead
+    link's weight folds into the receiver's diagonal.  Padding entries
+    carry weight exactly 0, so their out-of-bounds row-L gathers (jnp
+    clamps them) contribute nothing to either term."""
+    keep = m[rows] * m[cols]
+    lost = jax.ops.segment_sum(vals * (1.0 - keep), rows,
+                               num_segments=L + 1,
+                               indices_are_sorted=True)[:L]
+    return vals * keep, diag + lost
+
+
+def _sparse_masked_gossip_mixer(sw, T_con: int):
+    """Sparse lowering of ``partial_gossip``'s simulator mixer: fold the
+    mask once per iteration, then T_con segment-sum rounds.  The fold is
+    data-dependent, so there is no ``W^{T_con}`` hoist on any backend
+    (exactly like the dense lowering)."""
+    rows_h, cols_h, vals_h, diag_h = _sparse_arrays(sw)
+    L = sw.n
+
+    def mix(Z, m):
+        rows, cols = jnp.asarray(rows_h), jnp.asarray(cols_h)
+        vals = jnp.asarray(vals_h, Z.dtype)
+        diag = jnp.asarray(diag_h, Z.dtype)
+        vals_eff, diag_eff = _sparse_masked_fold(
+            rows, cols, vals, diag, m.astype(Z.dtype), L)
+        flat = Z.reshape(L, -1)
+
+        def round_(carry, _):
+            return sparse_round(carry, rows, cols, vals_eff, diag_eff,
+                                L), None
+        out, _ = jax.lax.scan(round_, flat, None, length=T_con)
+        return out.reshape(Z.shape)
+    return mix
+
+
 class MaskedGossipCombine(GossipCombine):
     """Base of the dropout-tolerant gossip rules: per-iteration
     availability masks enter the combine, so the stateless
@@ -999,8 +1482,12 @@ class PartialGossipCombine(MaskedGossipCombine):
         (no ``W^{T_con}`` hoist); the exact path repeats
         ``stacked_product``'s flattened matmul arithmetic so the full
         mask is bit-identical to dense gossip."""
+        from repro.distributed.mixing import SparseWeights
+        W = maybe_sparsify(W)
         if T_con == 0:
             return lambda Z, m: Z
+        if isinstance(W, SparseWeights):
+            return _sparse_masked_gossip_mixer(W, T_con)
 
         def mix(Z, m):
             Wd = jnp.asarray(W).astype(Z.dtype)
@@ -1081,8 +1568,12 @@ class StaleGossipCombine(MaskedGossipCombine):
                                     backend: str = "xla-ref",
                                     **kw) -> Callable:
         """Simulator closure ``(Z, x̂, m) ↦ (Z', x̂')``."""
+        from repro.distributed.mixing import SparseWeights
+        W = maybe_sparsify(W)
         if T_con == 0:
             return lambda Z, state, m: (Z, state)
+        if isinstance(W, SparseWeights):
+            return self._make_sparse_masked_state_mixer(W, T_con)
 
         def mix(Z, state, m):
             N = Z.shape[0]
@@ -1103,6 +1594,39 @@ class StaleGossipCombine(MaskedGossipCombine):
                 # live g's own copy is exact (x̂₂_g = Z_g), so no self
                 # correction is needed; down nodes freeze outright
                 Z2 = jnp.where(mrow, Z2, Zc)
+                return (Z2, xhat2), None
+
+            (Zf, xf), _ = jax.lax.scan(round_, (Z, state),
+                                       jnp.arange(T_con))
+            return Zf, xf
+        return mix
+
+    @staticmethod
+    def _make_sparse_masked_state_mixer(sw, T_con: int):
+        """Sparse stale-gossip rounds: round 0 applies the DENSE weights
+        to the published copies (the queued stale packet delivers once),
+        later rounds the per-edge masked fold — per-round ``where`` on
+        the edge values instead of the (L, L) ``jnp.where`` of the dense
+        lowering."""
+        rows_h, cols_h, vals_h, diag_h = _sparse_arrays(sw)
+        L = sw.n
+
+        def mix(Z, state, m):
+            rows, cols = jnp.asarray(rows_h), jnp.asarray(cols_h)
+            vals = jnp.asarray(vals_h, Z.dtype)
+            diag = jnp.asarray(diag_h, Z.dtype)
+            vals_eff, diag_eff = _sparse_masked_fold(
+                rows, cols, vals, diag, m.astype(Z.dtype), L)
+            mrow = m.astype(bool)[:, None, None]
+
+            def round_(carry, rd):
+                Zc, xhat = carry
+                xhat2 = jnp.where(mrow, Zc, xhat)   # live nodes publish
+                vals_rd = jnp.where(rd == 0, vals, vals_eff)
+                diag_rd = jnp.where(rd == 0, diag, diag_eff)
+                Z2 = sparse_round(xhat2.reshape(L, -1), rows, cols,
+                                  vals_rd, diag_rd, L).reshape(Zc.shape)
+                Z2 = jnp.where(mrow, Z2, Zc)        # down: freeze
                 return (Z2, xhat2), None
 
             (Zf, xf), _ = jax.lax.scan(round_, (Z, state),
@@ -1182,8 +1706,12 @@ class PushSumGossipCombine(MaskedGossipCombine):
 
     def make_sim_masked_mixer(self, W, T_con: int, *,
                               backend: str = "xla-ref") -> Callable:
+        from repro.distributed.mixing import SparseWeights
+        W = maybe_sparsify(W)
         if T_con == 0:
             return lambda Z, m: Z
+        if isinstance(W, SparseWeights):
+            return self._make_sparse_masked_mixer(W, T_con)
 
         def mix(Z, m):
             N = Z.shape[0]
@@ -1199,6 +1727,44 @@ class PushSumGossipCombine(MaskedGossipCombine):
                     wv = stacked_dense_mix(wv, C, backend=backend)
                 else:
                     zf, wv = C @ zf, C @ wv
+                return (zf, wv), None
+
+            (zf, wv), _ = jax.lax.scan(round_, (flat, w0), None,
+                                       length=T_con)
+            out = zf / jnp.where(wv > 0, wv, 1.0)    # bias correction
+            return out.reshape(Z.shape)
+        return mix
+
+    @staticmethod
+    def _make_sparse_masked_mixer(sw, T_con: int):
+        """Sparse push-sum: the column normalizer is a segment-sum over
+        SENDER columns of the masked edge values (``c_j = W_jj +
+        Σ_{i≠j} m_i m_j W_ij`` — the self link always stays, exactly
+        like :func:`push_sum_matrix`), the column-stochastic edge
+        values are ``vals_m / c[col]``, and the companion weight vector
+        rides the same rounds."""
+        rows_h, cols_h, vals_h, diag_h = _sparse_arrays(sw)
+        L = sw.n
+
+        def mix(Z, m):
+            rows, cols = jnp.asarray(rows_h), jnp.asarray(cols_h)
+            vals = jnp.asarray(vals_h, Z.dtype)
+            diag = jnp.asarray(diag_h, Z.dtype)
+            mf = m.astype(Z.dtype)
+            vals_m = vals * mf[rows] * mf[cols]
+            # live column mass: padding cols point at 0 but carry
+            # weight 0, so the unsorted sender-side segment_sum is safe
+            c = diag + jax.ops.segment_sum(vals_m, cols, num_segments=L)
+            c = jnp.where(c > 0, c, 1.0)
+            vals_C = vals_m / c[cols]
+            diag_C = diag / c
+            flat = Z.reshape(L, -1)
+            w0 = jnp.ones((L, 1), Z.dtype)
+
+            def round_(carry, _):
+                zf, wv = carry
+                zf = sparse_round(zf, rows, cols, vals_C, diag_C, L)
+                wv = sparse_round(wv, rows, cols, vals_C, diag_C, L)
                 return (zf, wv), None
 
             (zf, wv), _ = jax.lax.scan(round_, (flat, w0), None,

@@ -14,12 +14,219 @@ requires double stochasticity on irregular graphs).
 
 ``gamma(W) = max(|λ₂|, |λ_L|)`` is the consensus contraction factor of
 Proposition 1.
+
+Scale path: the dense builders above return (L, L) numpy matrices and are
+the small-L anchor; their sparse counterparts
+(:func:`metropolis_weights_sparse` / :func:`equal_neighbor_weights_sparse`
+/ :func:`lazy_weights_sparse` / :func:`circulant_weights_sparse`) build a
+:class:`SparseWeights` — COO off-diagonal edges + a separate diagonal —
+straight from a :class:`~repro.distributed.graphs.SparseGraph`'s CSR
+arrays, never allocating O(L²).  ``SparseWeights.to_dense()`` equals the
+dense builder's matrix to float round-off (summation order differs), the
+parity the tests pin.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.distributed.graphs import Graph
+from repro.distributed.graphs import (DENSE_MATERIALIZE_MAX, Graph,
+                                      SparseGraph)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseWeights:
+    """A mixing matrix in sparse form (host numpy, static metadata).
+
+    ``rows``/``cols``/``vals`` are the off-diagonal entries in COO
+    layout, sorted by (row, col) — CSR order, so ``segment_sum`` over
+    ``rows`` sees sorted segment ids; ``diag`` is the (L,) diagonal kept
+    separate (the self weight never crosses a wire, and every combine
+    rule treats it specially).  The sparsity PATTERN must be symmetric
+    (undirected graphs); the values need not be (push-sum's
+    column-normalized matrices are directed).
+    """
+    n: int
+    rows: np.ndarray   # (nnz,) int32 — receiver
+    cols: np.ndarray   # (nnz,) int32 — sender
+    vals: np.ndarray   # (nnz,) float64
+    diag: np.ndarray   # (L,)  float64
+
+    def __post_init__(self):
+        rows = np.asarray(self.rows, dtype=np.int32)
+        cols = np.asarray(self.cols, dtype=np.int32)
+        vals = np.asarray(self.vals, dtype=np.float64)
+        diag = np.asarray(self.diag, dtype=np.float64)
+        order = np.lexsort((cols, rows))
+        if not np.array_equal(order, np.arange(order.size)):
+            rows, cols, vals = rows[order], cols[order], vals[order]
+        for name, arr in (("rows", rows), ("cols", cols), ("vals", vals)):
+            object.__setattr__(self, name, arr)
+        object.__setattr__(self, "diag", diag)
+        if not (rows.shape == cols.shape == vals.shape):
+            raise ValueError("rows/cols/vals must share a shape")
+        if diag.shape != (self.n,):
+            raise ValueError(f"diag must be ({self.n},), got {diag.shape}")
+        if rows.size:
+            if rows.min() < 0 or rows.max() >= self.n \
+                    or cols.min() < 0 or cols.max() >= self.n:
+                raise ValueError("edge index out of range")
+            if np.any(rows == cols):
+                raise ValueError("diagonal entries belong in .diag")
+
+    # ------------------------------------------------------ construction
+
+    @classmethod
+    def from_dense(cls, W) -> "SparseWeights":
+        Wn = np.asarray(W, dtype=np.float64)
+        if Wn.ndim != 2 or Wn.shape[0] != Wn.shape[1]:
+            raise ValueError(f"mixing matrix must be square, got {Wn.shape}")
+        off = Wn - np.diag(np.diag(Wn))
+        rows, cols = np.nonzero(off)
+        return cls(n=Wn.shape[0], rows=rows.astype(np.int32),
+                   cols=cols.astype(np.int32), vals=off[rows, cols],
+                   diag=np.diag(Wn).copy())
+
+    # -------------------------------------------------------- interface
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n, self.n)
+
+    @property
+    def nnz(self) -> int:
+        return self.vals.size
+
+    @property
+    def n_edges(self) -> int:
+        """Undirected edge count of the sparsity pattern."""
+        return self.nnz // 2
+
+    @property
+    def density(self) -> float:
+        return self.nnz / (self.n * (self.n - 1)) if self.n > 1 else 0.0
+
+    def row_sums(self) -> np.ndarray:
+        return self.diag + np.bincount(self.rows, weights=self.vals,
+                                       minlength=self.n)
+
+    def col_sums(self) -> np.ndarray:
+        return self.diag + np.bincount(self.cols, weights=self.vals,
+                                       minlength=self.n)
+
+    def to_dense(self) -> np.ndarray:
+        if self.n > DENSE_MATERIALIZE_MAX:
+            raise ValueError(
+                f"refusing to densify a {self.n}×{self.n} mixing matrix "
+                f"(> DENSE_MATERIALIZE_MAX={DENSE_MATERIALIZE_MAX})")
+        W = np.zeros((self.n, self.n))
+        W[self.rows, self.cols] = self.vals
+        W[np.diag_indices(self.n)] = self.diag
+        return W
+
+    def scipy_csr(self):
+        """scipy.sparse CSR view (diagonal included) — the host-side
+        form the ``W^{T_con}`` power hoist multiplies in."""
+        import scipy.sparse as sp
+        idx = np.arange(self.n, dtype=np.int32)
+        return sp.csr_matrix(
+            (np.concatenate([self.vals, self.diag]),
+             (np.concatenate([self.rows, idx]),
+              np.concatenate([self.cols, idx]))), shape=self.shape)
+
+    def power(self, T: int, max_fill_factor: float = 8.0):
+        """``W^T`` as a SparseWeights, or ``None`` when the power's
+        fill-in exceeds ``max_fill_factor × max(nnz, L)`` stored entries
+        — the budget at which hoisting T_con rounds into one product
+        stops paying and the caller should keep the per-round sparse
+        product instead (graceful degradation)."""
+        if T < 1:
+            raise ValueError(f"power needs T >= 1, got {T}")
+        budget = max_fill_factor * max(self.nnz, self.n)
+        A = self.scipy_csr()
+        P = A
+        for _ in range(T - 1):
+            P = (P @ A).tocsr()
+            P.eliminate_zeros()
+            if P.nnz > budget:
+                return None
+        P = P.tocoo()
+        off = P.row != P.col
+        diag = np.zeros(self.n)
+        diag[P.row[~off]] = P.data[~off]
+        return SparseWeights(n=self.n, rows=P.row[off].astype(np.int32),
+                             cols=P.col[off].astype(np.int32),
+                             vals=P.data[off].astype(np.float64), diag=diag)
+
+
+def _graph_csr(graph) -> tuple[SparseGraph, np.ndarray, np.ndarray]:
+    """(sparse graph, COO rows, COO cols) for either graph flavour."""
+    sg = graph if isinstance(graph, SparseGraph) else graph.to_sparse()
+    return sg, sg._row_idx().astype(np.int32), sg.col_idx
+
+
+def equal_neighbor_weights_sparse(graph) -> SparseWeights:
+    """Sparse :func:`equal_neighbor_weights`: W_gj = 1/deg_g on edges,
+    diagonal 1 − rowsum (zero except isolated nodes)."""
+    sg, rows, cols = _graph_csr(graph)
+    deg = np.maximum(sg.degrees.astype(np.float64), 1.0)
+    vals = 1.0 / deg[rows]
+    diag = 1.0 - np.bincount(rows, weights=vals, minlength=sg.n_nodes)
+    return SparseWeights(n=sg.n_nodes, rows=rows, cols=cols, vals=vals,
+                         diag=diag)
+
+
+def metropolis_weights_sparse(graph) -> SparseWeights:
+    """Sparse :func:`metropolis_weights`: W_ij = 1/(1+max(d_i, d_j)) on
+    edges — computed per edge from the CSR degrees, O(E)."""
+    sg, rows, cols = _graph_csr(graph)
+    deg = sg.degrees.astype(np.float64)
+    vals = 1.0 / (1.0 + np.maximum(deg[rows], deg[cols]))
+    diag = 1.0 - np.bincount(rows, weights=vals, minlength=sg.n_nodes)
+    return SparseWeights(n=sg.n_nodes, rows=rows, cols=cols, vals=vals,
+                         diag=diag)
+
+
+def lazy_weights_sparse(graph, beta: float = 0.5) -> SparseWeights:
+    """Sparse :func:`lazy_weights`: (1−β)I + β·W_metropolis."""
+    w = metropolis_weights_sparse(graph)
+    return SparseWeights(n=w.n, rows=w.rows, cols=w.cols,
+                         vals=beta * w.vals,
+                         diag=(1.0 - beta) + beta * w.diag)
+
+
+def circulant_weights_sparse(L: int, shifts: tuple[int, ...] = (-1, 1),
+                             self_weight: float | None = None
+                             ) -> SparseWeights:
+    """Sparse :func:`circulant_weights`: per-shift uniform weights,
+    colliding shifts accumulated exactly like the dense builder (shifts
+    that are ≡ 0 mod L fold into the diagonal)."""
+    k = len(shifts)
+    sw = self_weight if self_weight is not None else 1.0 / (k + 1)
+    wn = (1.0 - sw) / k if k else 0.0
+    i = np.arange(L, dtype=np.int64)
+    rows = np.concatenate([i for _ in shifts]) if k else i[:0]
+    cols = np.concatenate([(i + s) % L for s in shifts]) if k else i[:0]
+    diag = np.full(L, float(sw))
+    off = rows != cols
+    diag += np.bincount(rows[~off], minlength=L) * wn
+    key, inv = np.unique(rows[off] * L + cols[off], return_inverse=True)
+    vals = np.bincount(inv, minlength=key.size) * wn
+    return SparseWeights(n=L, rows=(key // L).astype(np.int32),
+                         cols=(key % L).astype(np.int32), vals=vals,
+                         diag=diag)
+
+
+def neighbor_average_weights_sparse(graph) -> SparseWeights:
+    """Sparse DGD neighbour average M = D⁻¹A (zero diagonal) — the
+    sparse counterpart of
+    :func:`repro.distributed.consensus.neighbor_average_matrix`."""
+    sg, rows, cols = _graph_csr(graph)
+    deg = np.maximum(sg.degrees.astype(np.float64), 1.0)
+    return SparseWeights(n=sg.n_nodes, rows=rows, cols=cols,
+                         vals=1.0 / deg[rows],
+                         diag=np.zeros(sg.n_nodes))
 
 
 def equal_neighbor_weights(graph: Graph) -> np.ndarray:

@@ -213,10 +213,16 @@ def test_mesh_substrate_validation():
         run_experiment(_with_solver(mesh_spec, "sim_only_solver"), key=0)
     # weights are no longer restricted to circulant — with the right
     # device count a metropolis ER spec dispatches (subprocess tests
-    # assert the parity); here only the node/device check can trip
+    # assert the parity).  When L != device_count, solvers WITH a
+    # virtual-node runtime (PR 8) still dispatch as long as the node
+    # count divides evenly over devices; solvers without one fail
+    # loudly on the node/device check.
     if jax.device_count() != TINY.problem.L:
         with pytest.raises(ValueError, match="device"):
-            run_experiment(mesh_spec, key=0)
+            run_experiment(_with_solver(mesh_spec, "dgd_altgdmin"), key=0)
+        if TINY.problem.L % jax.device_count() == 0:
+            trace = run_experiment(mesh_spec, key=0)   # virtual tier
+            assert trace.U_nodes.shape[0] == TINY.problem.L
 
 
 # --------------------------------------------------------- wall clock

@@ -1,0 +1,422 @@
+"""Sparse consensus path: SparseGraph families, SparseWeights mixing
+parity, the segment-sum CombineRule lowerings vs the dense stacked
+product, padding-row neutrality, RCM shift pruning, degree-weighted comm
+pricing, and sparse-vs-dense trajectory parity for every registered
+solver (plus the virtual-node mesh tier in a subprocess with 8 fake
+devices)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import graphs, mixing
+from repro.distributed.graphs import SparseGraph
+from repro.distributed.mixing import SparseWeights
+from repro.distributed import consensus
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------- graph families
+
+FAMILIES = {
+    "erdos_renyi": lambda L: graphs.erdos_renyi(L, p=0.15, seed=3),
+    "ring": lambda L: graphs.ring(L),
+    "barabasi_albert": lambda L: graphs.barabasi_albert(L, m=2, seed=0),
+    "hierarchical": lambda L: graphs.hierarchical(L, branching=4),
+    "cluster_cliques": lambda L: graphs.cluster_of_cliques(L, clique=8,
+                                                           seed=2),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_families_sparse_born_and_connected(family):
+    g = FAMILIES[family](48)
+    assert isinstance(g, SparseGraph)
+    assert g.is_connected()
+    a = np.asarray(g.to_dense().adj)
+    assert np.array_equal(a, a.T)
+    assert np.all(np.diag(a) == 0)
+    assert g.n_edges * 2 == int(a.sum())
+    u, v = g.edges()
+    assert np.all(u < v)                      # canonical undirected form
+    assert g.max_degree == int(a.sum(axis=1).max())
+    assert np.array_equal(g.degrees, a.sum(axis=1))
+
+
+def test_large_graph_never_densifies():
+    L = 20_000
+    g = graphs.barabasi_albert(L, m=3, seed=1)
+    assert g.n_nodes == L and g.is_connected()
+    with pytest.raises(ValueError):
+        _ = g.adj
+    with pytest.raises(ValueError):
+        g.to_dense()
+    # ER above its dense cutoff takes the G(L, M) sampler
+    p = 2 * np.log(L) / L                     # safely connected regime
+    ge = graphs.erdos_renyi(L, p=p, seed=0)
+    assert ge.is_connected()
+    mean = p * L * (L - 1) / 2
+    assert abs(ge.n_edges - mean) < 6 * np.sqrt(mean)
+    # sub-threshold p: the ring-overlay fallback still connects
+    gf = graphs.erdos_renyi(L, p=0.5 / L, seed=0, max_tries=2)
+    assert gf.is_connected()
+
+
+def test_er_small_L_dense_draw_unchanged():
+    # below the cutoff the historical dense-matrix draw is kept so seeds
+    # reproduce pre-sparse graphs bit for bit
+    g = graphs.erdos_renyi(24, p=0.3, seed=7)
+    rng = np.random.default_rng(7)
+    upper = np.triu(rng.random((24, 24)) < 0.3, k=1)
+    legacy = upper | upper.T
+    assert np.array_equal(np.asarray(g.to_dense().adj).astype(bool), legacy)
+
+
+# ------------------------------------------------- mixing weight parity
+
+WEIGHT_PAIRS = {
+    "metropolis": (mixing.metropolis_weights,
+                   mixing.metropolis_weights_sparse),
+    "equal_neighbor": (mixing.equal_neighbor_weights,
+                       mixing.equal_neighbor_weights_sparse),
+    "lazy": (lambda g: mixing.lazy_weights(g, 0.5),
+             lambda g: mixing.lazy_weights_sparse(g, 0.5)),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("scheme", sorted(WEIGHT_PAIRS))
+def test_sparse_weights_match_dense_builders(family, scheme):
+    g = FAMILIES[family](40)
+    dense_fn, sparse_fn = WEIGHT_PAIRS[scheme]
+    Wd = np.asarray(dense_fn(g.to_dense()))
+    sw = sparse_fn(g)
+    np.testing.assert_allclose(sw.to_dense(), Wd, atol=1e-14)
+
+
+def test_circulant_sparse_weights_fold_collisions():
+    sw = mixing.circulant_weights_sparse(6, (-1, 1, 3, -3), None)
+    Wd = np.asarray(mixing.circulant_weights(6, (-1, 1, 3, -3), None))
+    np.testing.assert_allclose(sw.to_dense(), Wd, atol=1e-15)
+
+
+def test_sparse_power_budget_degrade():
+    g = graphs.erdos_renyi(60, p=0.12, seed=1)
+    sw = mixing.metropolis_weights_sparse(g)
+    p2 = sw.power(2)
+    assert p2 is not None
+    np.testing.assert_allclose(
+        p2.to_dense(), np.linalg.matrix_power(sw.to_dense(), 2),
+        atol=1e-12)
+    # a tiny fill budget forces the per-round fallback
+    assert sw.power(4, max_fill_factor=1.01) is None
+
+
+# ------------------------------------------------- combine-rule parity
+
+def _parity_setup(L=24, k=5, seed=0):
+    g = graphs.erdos_renyi(L, p=0.3, seed=seed)
+    sw = mixing.metropolis_weights_sparse(g)
+    Wd = jnp.asarray(sw.to_dense())
+    Z = jax.random.normal(jax.random.PRNGKey(seed), (L, 7, k))
+    return sw, Wd, Z
+
+
+@pytest.mark.parametrize("rule", ["gossip", "exact_diffusion",
+                                  "beyond_central"])
+def test_gossip_family_sparse_parity(rule):
+    sw, Wd, Z = _parity_setup()
+    r = consensus.get_rule(rule)
+    dense = r.make_sim_mixer(Wd, 3, backend="xla-ref")
+    sparse = r.make_sim_mixer(sw, 3, backend="xla-ref")
+    np.testing.assert_allclose(np.asarray(sparse(Z)),
+                               np.asarray(dense(Z)), atol=1e-12)
+
+
+def test_neighbor_sparse_parity():
+    g = graphs.erdos_renyi(24, p=0.3, seed=0)
+    Md = consensus.neighbor_average_matrix(
+        jnp.asarray(g.to_dense().adj, jnp.float64))
+    Ms = consensus.neighbor_average_matrix(g)
+    assert isinstance(Ms, SparseWeights)
+    Z = jax.random.normal(jax.random.PRNGKey(1), (24, 5))
+    r = consensus.get_rule("neighbor")
+    np.testing.assert_allclose(
+        np.asarray(r.make_sim_mixer(Ms, 1, backend="xla-ref")(Z)),
+        np.asarray(r.make_sim_mixer(Md, 1, backend="xla-ref")(Z)),
+        atol=1e-12)
+
+
+@pytest.mark.parametrize("rule,kw", [
+    ("topk_gossip", dict(compression_k=3)),
+    ("quantized_gossip", dict(compression="int8")),
+    ("event_gossip", dict(event_threshold=0.05)),
+])
+def test_compressed_rules_sparse_parity(rule, kw):
+    sw, Wd, Z = _parity_setup()
+    r = consensus.get_rule(rule)
+    state0 = r.init_state(Z, **kw)
+    md = r.make_sim_state_mixer(Wd, 3, backend="xla-ref", **kw)
+    ms = r.make_sim_state_mixer(sw, 3, backend="xla-ref", **kw)
+    zd, _ = md(Z, state0)
+    zs, _ = ms(Z, state0)
+    np.testing.assert_allclose(np.asarray(zs), np.asarray(zd), atol=1e-12)
+
+
+def test_partial_and_pushsum_sparse_parity():
+    sw, Wd, Z = _parity_setup()
+    m = jnp.asarray(np.random.default_rng(3).random(24) > 0.3)
+    for rule in ("partial_gossip", "push_sum_gossip"):
+        r = consensus.get_rule(rule)
+        dense = r.make_sim_masked_mixer(Wd, 3, backend="xla-ref")
+        sparse = r.make_sim_masked_mixer(sw, 3, backend="xla-ref")
+        np.testing.assert_allclose(np.asarray(sparse(Z, m)),
+                                   np.asarray(dense(Z, m)), atol=1e-12,
+                                   err_msg=rule)
+
+
+def test_stale_sparse_parity():
+    sw, Wd, Z = _parity_setup()
+    m = jnp.asarray(np.random.default_rng(5).random(24) > 0.3)
+    r = consensus.get_rule("stale_gossip")
+    state0 = r.init_state(Z)
+    md = r.make_sim_masked_state_mixer(Wd, 3, backend="xla-ref")
+    ms = r.make_sim_masked_state_mixer(sw, 3, backend="xla-ref")
+    zd, std = md(Z, state0, m)
+    zs, sts = ms(Z, state0, m)
+    np.testing.assert_allclose(np.asarray(zs), np.asarray(zd), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(sts), np.asarray(std), atol=1e-12)
+
+
+def test_padding_row_neutrality():
+    # extra padding entries (row=L, weight 0.0) must be BITWISE invisible
+    sw, _, Z = _parity_setup()
+    rows, cols, vals, diag = consensus._sparse_arrays(sw)
+    zf = Z.reshape(Z.shape[0], -1)
+    base = consensus.sparse_round(zf, rows, cols, vals, diag, sw.n)
+    pad = consensus._SPARSE_PAD
+    rows2 = jnp.concatenate([rows, jnp.full((pad,), sw.n, rows.dtype)])
+    cols2 = jnp.concatenate([cols, jnp.zeros((pad,), cols.dtype)])
+    vals2 = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+    more = consensus.sparse_round(zf, rows2, cols2, vals2, diag, sw.n)
+    assert np.array_equal(np.asarray(base), np.asarray(more))
+
+
+def test_consensus_spread_large_L_is_radius():
+    # the exact pairwise diameter fuses down to an (L, L) norm buffer —
+    # 40 GB at L=100k — so above SPREAD_EXACT_MAX the metric switches to
+    # the O(L·d·r) consensus radius; below it, exact and unchanged
+    from repro.core.metrics import SPREAD_EXACT_MAX, consensus_spread
+    rng = np.random.default_rng(0)
+    U = jnp.asarray(rng.normal(size=(SPREAD_EXACT_MAX + 1, 3, 2)))
+    dev = U - jnp.mean(U, axis=0, keepdims=True)
+    radius = jnp.max(jnp.sqrt(jnp.sum(dev ** 2, axis=(-2, -1))))
+    assert np.isclose(float(consensus_spread(U)), float(radius))
+    small = U[:8]
+    diff = small[:, None] - small[None, :]
+    exact = jnp.max(jnp.sqrt(jnp.sum(diff ** 2, axis=(-2, -1))))
+    assert float(consensus_spread(small)) == float(exact)
+
+
+def test_maybe_sparsify_policy():
+    small = np.asarray(mixing.metropolis_weights(
+        graphs.erdos_renyi(32, p=0.2, seed=0).to_dense()))
+    assert consensus.maybe_sparsify(jnp.asarray(small)) is not None
+    assert not isinstance(consensus.maybe_sparsify(jnp.asarray(small)),
+                          SparseWeights)          # below node cutoff
+    g = graphs.erdos_renyi(consensus.SPARSE_MIN_NODES, p=0.01, seed=0)
+    big = mixing.metropolis_weights_sparse(g).to_dense()
+    assert isinstance(consensus.maybe_sparsify(big), SparseWeights)
+    sw = mixing.metropolis_weights_sparse(graphs.ring(16))
+    assert consensus.maybe_sparsify(sw) is sw     # explicit passes through
+
+
+def test_power_hoist_matches_per_round():
+    sw, Wd, Z = _parity_setup()
+    r = consensus.get_rule("gossip")
+    # pallas-backend lowering may hoist W^T; xla-ref never does — both
+    # must agree with the exact dense product
+    exact = np.asarray(consensus.stacked_product(Z, Wd, 5))
+    hoisted = r.make_sim_mixer(sw, 5, backend="jax_pallas")
+    np.testing.assert_allclose(np.asarray(hoisted(Z)), exact, atol=1e-12)
+
+
+# ------------------------------------------------- RCM shift pruning
+
+def test_rcm_prunes_scrambled_structured_graph():
+    L = 96
+    Wc = np.asarray(mixing.metropolis_weights(
+        graphs.cluster_of_cliques(L, clique=8, seed=2).to_dense()))
+    p = np.random.default_rng(0).permutation(L)
+    rw = consensus.mesh_weights_relabeled(Wc[np.ix_(p, p)])  # verify=True
+    assert rw.shifts_after < rw.shifts_before / 2
+    # relabeled mixing is the same arithmetic: permute, mix, un-permute
+    Z = np.random.default_rng(1).normal(size=(L, 5))
+    W = Wc[np.ix_(p, p)]
+    Wp = W[np.ix_(rw.perm, rw.perm)]
+    inv = np.empty(L, dtype=np.int64)
+    inv[rw.perm] = np.arange(L)
+    np.testing.assert_allclose((Wp @ Z[rw.perm])[inv], W @ Z, atol=1e-12)
+
+
+def test_rcm_identity_fallback_on_circulant():
+    rw = consensus.mesh_weights_relabeled(
+        np.asarray(mixing.circulant_weights(32, (-1, 1), None)))
+    assert np.array_equal(rw.perm, np.arange(32))
+    assert rw.shifts_after == rw.shifts_before == 2
+
+
+def test_rcm_round_trip_verifies_on_er():
+    W = np.asarray(mixing.metropolis_weights(
+        graphs.erdos_renyi(64, p=0.1, seed=5).to_dense()))
+    rw = consensus.mesh_weights_relabeled(W, verify=True)
+    assert rw.shifts_before >= rw.shifts_after >= 1
+
+
+# ------------------------------------------------- comm pricing parity
+
+def test_network_bytes_from_edges():
+    sig = consensus.get_rule("gossip").signature(3)
+    g = graphs.erdos_renyi(64, p=0.1, seed=2)
+    dense_edges = int(np.asarray(g.to_dense().adj).sum()) // 2
+    assert g.n_edges == dense_edges
+    b = sig.network_bytes_per_iter(40, 8, n_nodes=64, n_edges=g.n_edges)
+    assert b == 3 * 2 * dense_edges * 40 * 8
+
+
+def test_time_axis_degree_weighted_dense_equals_sparse():
+    from repro.core.comm_model import time_axis_from_signature
+    g = graphs.erdos_renyi(32, p=0.2, seed=4)
+    sig = consensus.get_rule("gossip").signature(2)
+    deg_sparse = g.degrees
+    deg_dense = np.asarray(g.to_dense().adj).sum(axis=1).astype(int)
+    ax_s = time_axis_from_signature(sig, 5, 16, 2, 32, int(g.max_degree),
+                                    1e-3, seed=0, degrees=deg_sparse)
+    ax_d = time_axis_from_signature(sig, 5, 16, 2, 32, int(g.max_degree),
+                                    1e-3, seed=0, degrees=deg_dense)
+    np.testing.assert_array_equal(ax_s, ax_d)
+    # and the degree-weighted axis is >= the uniform max_deg axis is NOT
+    # guaranteed (max over more draws) — but both must be monotone
+    assert np.all(np.diff(ax_s) > 0)
+
+
+# ------------------------------------------------- solver trajectories
+
+def _small_spec(name, representation):
+    from repro.api.spec import (ExperimentSpec, InitSpec, ProblemSpec,
+                                SolverSpec, TopologySpec)
+    return ExperimentSpec(
+        problem=ProblemSpec(d=16, T=48, r=2, n=12, L=24, kappa=1.2),
+        topology=TopologySpec(family="erdos_renyi", p=0.3, seed=3,
+                              weights="metropolis",
+                              representation=representation),
+        init=InitSpec(T_pm=4, T_con=2),
+        solver=SolverSpec(name=name, T_GD=3, T_con=2),
+    )
+
+
+@pytest.mark.parametrize("name", sorted(
+    __import__("repro.api.registry", fromlist=["solver_names"])
+    .solver_names()))
+def test_every_solver_sparse_equals_dense(name):
+    from repro.api.runner import run_experiment
+    td = run_experiment(_small_spec(name, "dense"))
+    ts = run_experiment(_small_spec(name, "sparse"))
+    np.testing.assert_allclose(np.asarray(ts.U_nodes),
+                               np.asarray(td.U_nodes),
+                               rtol=1e-7, atol=1e-9)
+    np.testing.assert_allclose(ts.sd_max, td.sd_max, rtol=1e-7, atol=1e-9)
+
+
+def test_topology_spec_representation_validation():
+    from repro.api.spec import TopologySpec
+    with pytest.raises(ValueError):
+        TopologySpec(representation="csr")
+    t = TopologySpec(family="barabasi_albert", ba_m=2,
+                     representation="sparse")
+    assert t.use_sparse(24)
+    assert not TopologySpec(representation="dense").use_sparse(10_000)
+
+
+# ------------------------------------------------- virtual-node mesh
+
+VIRTUAL_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import dataclasses
+    import numpy as np
+    from repro.api.spec import (ExperimentSpec, InitSpec, ProblemSpec,
+                                SolverSpec, TopologySpec)
+    from repro.api.runner import run_experiment
+
+    base = ExperimentSpec(
+        problem=ProblemSpec(d=16, T=96, r=2, n=12, L=48, kappa=1.2),
+        topology=TopologySpec(family="erdos_renyi", p=0.15, seed=3,
+                              weights="metropolis"),
+        init=InitSpec(T_pm=4, T_con=2),
+        solver=SolverSpec(name="dif_altgdmin", T_GD=4, T_con=3),
+    )
+    sim = run_experiment(base)
+    # L=48 on 8 devices -> the virtual-node tier (block of 6 per device)
+    vm = run_experiment(dataclasses.replace(base, substrate="mesh"))
+    np.testing.assert_allclose(np.asarray(vm.U_nodes),
+                               np.asarray(sim.U_nodes),
+                               rtol=1e-8, atol=1e-9)
+    np.testing.assert_allclose(vm.sd_max, sim.sd_max,
+                               rtol=1e-8, atol=1e-10)
+    # sparse representation decomposes identically
+    vs = run_experiment(dataclasses.replace(
+        base, substrate="mesh",
+        topology=dataclasses.replace(base.topology,
+                                     representation="sparse")))
+    np.testing.assert_allclose(np.asarray(vs.U_nodes),
+                               np.asarray(sim.U_nodes),
+                               rtol=1e-8, atol=1e-9)
+    print("OK")
+""")
+
+
+def test_virtual_mesh_matches_simulator():
+    r = subprocess.run([sys.executable, "-c", VIRTUAL_SCRIPT],
+                       capture_output=True, text=True, cwd=REPO_ROOT,
+                       timeout=1200)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "OK" in r.stdout
+
+
+def test_virtual_topology_decomposition_reconstructs_W():
+    g = graphs.erdos_renyi(48, p=0.15, seed=3)
+    sw = mixing.metropolis_weights_sparse(g)
+    vt = consensus.VirtualTopology.from_weights(sw, 8)
+    assert vt.n_nodes == 48 and vt.block == 6
+    assert vt.n_local_entries + vt.n_cross_entries == sw.nnz
+    # rebuild the dense W from the class decomposition
+    W = np.zeros((48, 48))
+    V, D = vt.block, vt.n_dev
+    for dev in range(D):
+        lr = np.asarray(vt.local_rows[dev])
+        lc = np.asarray(vt.local_cols[dev])
+        lv = np.asarray(vt.local_vals[dev])
+        keep = lr < V
+        W[dev * V + lr[keep], dev * V + lc[keep]] += lv[keep]
+        for k, s in enumerate(vt.dev_shifts):
+            src = (dev + s) % D
+            cr = np.asarray(vt.cross_rows[k, dev])
+            cc = np.asarray(vt.cross_cols[k, dev])
+            cv = np.asarray(vt.cross_vals[k, dev])
+            keep = cr < V
+            W[dev * V + cr[keep], src * V + cc[keep]] += cv[keep]
+    W[np.arange(48), np.arange(48)] = np.asarray(vt.diag).ravel()
+    np.testing.assert_allclose(W, sw.to_dense(), atol=1e-15)
