@@ -67,6 +67,11 @@ def main() -> None:
     emit("serving_throughput", serving_rows, args.out)
     scale_rows = bench_scale(quick=args.quick)
     emit("scale_nodes", scale_rows, args.out)
+    # the virtual-mesh tier rows also get their own CSV (uploaded as a
+    # CI artifact next to the JSON — the per-PR scale trajectory)
+    emit("scale_virtual_mesh",
+         [r for r in scale_rows if r.get("section") == "virtual_mesh"],
+         args.out)
     bench_json = {
         "benchmark": "altgdmin_engine",
         "description": "fused node-batched AltGDmin iteration engine: "
@@ -126,9 +131,14 @@ def main() -> None:
                            "— µs/outer-iter + peak RSS + edge count "
                            "(section=large_L), the sparse segment-sum "
                            "vs dense stacked-matmul mix crossover "
-                           "(section=sparse_vs_dense), and RCM "
+                           "(section=sparse_vs_dense), RCM "
                            "shift-count pruning of the mesh "
-                           "decomposition (section=rcm)",
+                           "decomposition (section=rcm), and the "
+                           "virtual-node mesh tier at the same L — "
+                           "three non-gossip solver programs "
+                           "(exact_diffusion / dif_topk / dif_partial) "
+                           "on 8 fake devices through the one program "
+                           "lowering (section=virtual_mesh)",
             "rows": scale_rows,
         },
     }

@@ -15,10 +15,21 @@
     bandwidth, hence shift count, is irreducible) vs a
     scrambled-labeling cluster-of-cliques graph where RCM recovers the
     banded structure.
+  * section="virtual_mesh": the virtual-node mesh tier at the same
+    L=100k (quick: 10k) on 8 fake host devices — three NON-gossip
+    programs (exact_diffusion's ψ-corrected combine, dif_topk's
+    compressed wire, dif_partial's masked dropout combine) through
+    the one program lowering, via the runner's mesh dispatch.  Runs in
+    a subprocess because the fake device count is fixed at process
+    start.
 """
 from __future__ import annotations
 
+import json
 import resource
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -141,7 +152,81 @@ def bench_rcm(quick: bool = False):
     return rows
 
 
+_VIRTUAL_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, resource, sys, time
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import dataclasses
+    from repro.api.runner import materialize, run_experiment
+    from repro.api.spec import (ExperimentSpec, InitSpec, ProblemSpec,
+                                SolverSpec, TopologySpec)
+
+    L = int(sys.argv[1])
+    base = ExperimentSpec(
+        problem=ProblemSpec(d=16, T=L, r=2, n=8, L=L, kappa=1.2),
+        topology=TopologySpec(family="barabasi_albert", ba_m=3, seed=0,
+                              weights="metropolis",
+                              representation="sparse"),
+        init=InitSpec(T_pm=3, T_con=2),
+        solver=SolverSpec(name="dif_altgdmin", T_GD=3, T_con=3, eta=1e-4),
+        substrate="mesh",
+    )
+    mat = materialize(base)          # one graph/init for all solvers
+    n_dev = jax.device_count()
+    rows = []
+    for name, kw in (("exact_diffusion", {}),
+                     ("dif_topk", {"compression_k": 4}),
+                     ("dif_partial", {})):
+        spec = dataclasses.replace(
+            base, solver=dataclasses.replace(base.solver, name=name, **kw))
+        t0 = time.perf_counter()
+        trace = run_experiment(spec, materialized=mat)
+        jax.block_until_ready(trace.U_nodes)
+        total_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        trace = run_experiment(spec, materialized=mat)
+        jax.block_until_ready(trace.U_nodes)
+        warm_s = time.perf_counter() - t1
+        rows.append({
+            "section": "virtual_mesh",
+            "solver": name,
+            "L": L,
+            "n_dev": n_dev,
+            "block": L // n_dev,
+            "n_edges": int(mat.graph.n_edges),
+            "us_per_iter": warm_s / spec.solver.T_GD * 1e6,
+            "first_run_s": round(total_s, 3),
+            "peak_rss_mb": round(
+                resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                / 1024.0, 1),
+            "sd_max_final": float(trace.sd_max[-1]),
+        })
+    print("ROWS=" + json.dumps(rows))
+""")
+
+
+def bench_virtual_mesh(quick: bool = False):
+    """Virtual-node mesh tier rows — non-gossip programs at large L on
+    8 fake host devices (subprocess: device count is process-fixed)."""
+    import os
+
+    L = 10_000 if quick else 100_000
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    r = subprocess.run([sys.executable, "-c", _VIRTUAL_SCRIPT, str(L)],
+                       capture_output=True, text=True, cwd=repo_root,
+                       env={**env, "PYTHONPATH": "src"}, timeout=5400)
+    if r.returncode != 0:
+        raise RuntimeError(f"virtual-mesh bench failed:\n{r.stderr[-4000:]}")
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("ROWS=")][-1]
+    return json.loads(line[len("ROWS="):])
+
+
 def bench_scale(quick: bool = False):
     return (bench_large_L(quick=quick)
             + bench_sparse_vs_dense(quick=quick)
-            + bench_rcm(quick=quick))
+            + bench_rcm(quick=quick)
+            + bench_virtual_mesh(quick=quick))

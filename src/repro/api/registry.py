@@ -1,17 +1,23 @@
 """Solver registry — the AltGDmin-family algorithms behind ONE call
 convention.
 
-The legacy drivers in :mod:`repro.core.altgdmin` have mutually
-inconsistent signatures (W vs adjacency vs no topology argument; stacked
-``U0_nodes`` vs a single ``U0``).  A :class:`SolverDef` records those
-differences as data — which topology materialization the solver consumes
-(``"W"``/``"adj"``/``"none"``), whether it is decentralized, and which
+Every registered solver is now a :class:`~repro.core.program.
+SolverProgram`: the registry derives its simulator, mesh, and
+virtual-mesh entry points from the program's three lowerings
+(:func:`~repro.core.program.lower_simulator` /
+:func:`~repro.core.program.lower_mesh` /
+:func:`~repro.core.program.lower_virtual_mesh`), and the call-convention
+metadata a :class:`SolverDef` used to duplicate — which topology
+materialization the solver consumes (``"W"``/``"adj"``/``"none"``),
+whether it is decentralized, which
 :class:`~repro.distributed.consensus.CombineRule` carries its
 communication (the rule's :class:`CommSignature` prices the wall-clock
-axis) — so :func:`repro.api.runner.run_experiment` can drive any
-registered solver identically.  ``register_solver`` is open: the
-combine-rule variants of Exact Subspace Diffusion and Beyond
-Centralization plug in below without touching the runner.
+axis), and the extra SolverSpec knobs it takes — comes straight off the
+program, so :func:`repro.api.runner.run_experiment` can drive any
+registered solver identically on any substrate.  ``register_solver``
+stays open for hand-built defs, but the normal path is
+:func:`register_program_solver`: register the ~20-line program once and
+all three substrates (plus the runner dispatch) follow.
 """
 from __future__ import annotations
 
@@ -19,7 +25,9 @@ import dataclasses
 from typing import Callable
 
 from repro.core import altgdmin as _alg
-from repro.core import runtime as _runtime
+from repro.core.program import (SolverProgram, get_program,
+                                lower_mesh, lower_simulator,
+                                lower_virtual_mesh, program_names)
 from repro.distributed.consensus import COMBINE_RULES, CommSignature, get_rule
 
 
@@ -27,18 +35,21 @@ from repro.distributed.consensus import COMBINE_RULES, CommSignature, get_rule
 class SolverDef:
     """One registered algorithm.
 
-    ``fn`` is the legacy driver; ``call`` (below) adapts the uniform
-    convention onto it.  ``topology`` names what the solver consumes:
-    ``"W"`` (mixing matrix), ``"adj"`` (float adjacency), ``"none"``
-    (fusion center).  ``combine`` names the CombineRule that carries the
-    solver's communication; its signature prices the wall-clock axis
-    (gossip: T_con AGREE rounds/iter, neighbor: 1 exchange/iter,
-    central: gather + broadcast/iter).  ``mesh_capable`` marks solvers
-    with a shard_map runtime.  ``spec_kwargs`` lists extra SolverSpec
-    fields the driver consumes (forwarded by the runner, e.g.
-    ``local_steps`` for ``beyond_central``).  ``virtual_mesh_fn`` is the
-    virtual-node mesh runtime (L = devices × block; the runner
-    dispatches to it when L is a multiple of the device count).
+    ``fn`` is the simulator entry point (the program's simulator
+    lowering); ``call`` (below) adapts the uniform convention onto it.
+    ``topology`` names what the solver consumes: ``"W"`` (mixing
+    matrix), ``"adj"`` (float adjacency), ``"none"`` (fusion center).
+    ``combine`` names the CombineRule that carries the solver's
+    communication; its signature prices the wall-clock axis (gossip:
+    T_con AGREE rounds/iter, neighbor: 1 exchange/iter, central: gather
+    + broadcast/iter).  ``mesh_capable`` marks solvers with a shard_map
+    runtime.  ``spec_kwargs`` lists extra SolverSpec fields the driver
+    consumes (forwarded by the runner, e.g. ``local_steps`` for
+    ``beyond_central``).  ``virtual_mesh_fn`` is the virtual-node mesh
+    runtime (L = devices × block; the runner dispatches to it when L is
+    a multiple of the device count).  ``program`` is the underlying
+    :class:`~repro.core.program.SolverProgram` when the def was derived
+    from one.
     """
     name: str
     fn: Callable
@@ -49,6 +60,7 @@ class SolverDef:
     spec_kwargs: tuple = ()          # extra SolverSpec fields fn takes
     takes_avail: bool = False        # consumes a (T_GD, L) avail mask
     virtual_mesh_fn: Callable | None = None  # virtual-node mesh runtime
+    program: SolverProgram | None = None     # source program, if derived
 
     @property
     def mesh_capable(self) -> bool:
@@ -97,6 +109,23 @@ def register_solver(solver: SolverDef) -> SolverDef:
     return solver
 
 
+def register_program_solver(name: str) -> SolverDef:
+    """Derive and register a SolverDef from a registered
+    :class:`~repro.core.program.SolverProgram`: all three substrate
+    entry points come from the program's lowerings, and the call
+    convention metadata from its fields."""
+    p = get_program(name)
+    return register_solver(SolverDef(
+        name=p.name, fn=lower_simulator(p),
+        topology=p.topology, combine=p.combine,
+        decentralized=p.decentralized,
+        mesh_fn=lower_mesh(p),
+        spec_kwargs=p.spec_kwargs,
+        takes_avail=p.takes_avail,
+        virtual_mesh_fn=lower_virtual_mesh(p),
+        program=p))
+
+
 def get_solver(name: str) -> SolverDef:
     try:
         return SOLVERS[name]
@@ -109,74 +138,11 @@ def solver_names() -> tuple[str, ...]:
     return tuple(sorted(SOLVERS))
 
 
-register_solver(SolverDef(
-    name="dif_altgdmin", fn=_alg.dif_altgdmin,
-    topology="W", combine="gossip",
-    mesh_fn=_runtime.dif_altgdmin_mesh,
-    virtual_mesh_fn=_runtime.dif_altgdmin_virtual_mesh))
-
-register_solver(SolverDef(
-    name="dec_altgdmin", fn=_alg.dec_altgdmin,
-    topology="W", combine="gossip",
-    mesh_fn=_runtime.dec_altgdmin_mesh))
-
-register_solver(SolverDef(
-    name="centralized_altgdmin", fn=_alg.centralized_altgdmin,
-    topology="none", combine="central", decentralized=False,
-    mesh_fn=_runtime.centralized_altgdmin_mesh))
-
-register_solver(SolverDef(
-    name="dgd_altgdmin", fn=_alg.dgd_altgdmin,
-    topology="adj", combine="neighbor",
-    mesh_fn=_runtime.dgd_altgdmin_mesh))
-
-register_solver(SolverDef(
-    name="exact_diffusion", fn=_alg.exact_diffusion_altgdmin,
-    topology="W", combine="exact_diffusion",
-    mesh_fn=_runtime.exact_diffusion_mesh))
-
-register_solver(SolverDef(
-    name="beyond_central", fn=_alg.beyond_central_altgdmin,
-    topology="W", combine="beyond_central",
-    mesh_fn=_runtime.beyond_central_mesh,
-    spec_kwargs=("local_steps",)))
-
-# compressed-wire variants (stateful rules — error feedback / last-sent
-# state rides the drivers' scan carries); their signatures report the
-# compressed entries/bytes so the wall-clock axis prices the real payload
-register_solver(SolverDef(
-    name="dif_topk", fn=_alg.dif_topk_altgdmin,
-    topology="W", combine="topk_gossip",
-    mesh_fn=_runtime.dif_topk_mesh,
-    spec_kwargs=("compression_k", "consensus_gamma")))
-
-register_solver(SolverDef(
-    name="dif_quantized", fn=_alg.dif_quantized_altgdmin,
-    topology="W", combine="quantized_gossip",
-    mesh_fn=_runtime.dif_quantized_mesh,
-    spec_kwargs=("compression", "consensus_gamma")))
-
-register_solver(SolverDef(
-    name="dif_event", fn=_alg.dif_event_altgdmin,
-    topology="W", combine="event_gossip",
-    mesh_fn=_runtime.dif_event_mesh,
-    spec_kwargs=("event_threshold", "consensus_gamma")))
-
-# dropout-tolerant variants (system-realism layer): the runner
-# materializes the experiment's SystemSpec availability mask — one
-# (T_GD, L) fault schedule shared by the trajectory AND the simulated
-# time axis — and forwards it as ``avail=`` on both substrates
-register_solver(SolverDef(
-    name="dif_partial", fn=_alg.dif_partial_altgdmin,
-    topology="W", combine="partial_gossip",
-    mesh_fn=_runtime.dif_partial_mesh, takes_avail=True))
-
-register_solver(SolverDef(
-    name="dif_stale", fn=_alg.dif_stale_altgdmin,
-    topology="W", combine="stale_gossip",
-    mesh_fn=_runtime.dif_stale_mesh, takes_avail=True))
-
-register_solver(SolverDef(
-    name="dif_pushsum", fn=_alg.dif_pushsum_altgdmin,
-    topology="W", combine="push_sum_gossip",
-    mesh_fn=_runtime.dif_pushsum_mesh, takes_avail=True))
+# All 12 solvers — the paper's algorithms, the compressed-wire variants
+# (stateful rules: error feedback / last-sent state rides the lowerings'
+# aux scan carry), and the dropout-tolerant variants (the runner
+# materializes the SystemSpec availability mask and forwards it as
+# ``avail=`` on every substrate) — derive from their programs.
+for _name in program_names():
+    register_program_solver(_name)
+del _name

@@ -388,8 +388,9 @@ def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
     n_dev = jax.device_count()
     if p.L != n_dev:
         if (solver.virtual_mesh_fn is not None and n_dev >= 1
-                and p.L % n_dev == 0 and avail is None):
-            return _run_virtual_mesh(spec, solver, mat, eng, eta, n_dev)
+                and p.L % n_dev == 0):
+            return _run_virtual_mesh(spec, solver, mat, eng, eta, n_dev,
+                                     avail=avail)
         raise ValueError(f"substrate='mesh' needs one device per node: "
                          f"L={p.L} but {n_dev} devices are available "
                          f"(the virtual-node tier needs a solver with a "
@@ -416,21 +417,28 @@ def _run_mesh(spec: ExperimentSpec, solver: SolverDef, mat: Materialized,
 
 
 def _run_virtual_mesh(spec: ExperimentSpec, solver: SolverDef,
-                      mat: Materialized, eng, eta: float,
-                      n_dev: int) -> RunResult:
+                      mat: Materialized, eng, eta: float, n_dev: int,
+                      avail: np.ndarray | None = None) -> RunResult:
     """The virtual-node mesh tier: L = n_dev × block, contiguous blocks
     of virtual nodes per device — co-located gossip is an on-device
     segment-sum, only cross-device edge classes pay collective-permutes.
     Any mixing matrix (dense or SparseWeights) decomposes; the W is the
-    SAME one the simulator mixes with, so trajectories agree to the
-    consensus layer's parity tolerance."""
+    SAME one the simulator mixes with (for ``"adj"`` solvers, the same
+    row-stochastic neighbour average the simulator builds), so
+    trajectories agree to the consensus layer's parity tolerance."""
     from repro.distributed.mixing import SparseWeights
-    W = mat.W
+    if solver.topology == "adj":
+        W = np.asarray(_consensus.neighbor_average_matrix(mat.adj))
+    else:
+        W = mat.W
     if not isinstance(W, SparseWeights):
         W = SparseWeights.from_dense(np.asarray(W))
     vt = _consensus.VirtualTopology.from_weights(W, n_dev)
     mesh = make_mesh((n_dev,), ("nodes",))
+    kw = {k: getattr(spec.solver, k) for k in solver.spec_kwargs}
+    if avail is not None:
+        kw.update(avail=jnp.asarray(avail))
     return solver.virtual_mesh_fn(
         mat.init.U0, mat.Xg, mat.yg, mesh, "nodes", vt=vt, eta=eta,
         T_GD=spec.solver.T_GD, T_con=spec.solver.T_con,
-        engine=eng, U_star=mat.problem.U_star)
+        engine=eng, U_star=mat.problem.U_star, **kw)

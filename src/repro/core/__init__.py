@@ -19,9 +19,23 @@ from repro.core.engine import AltgdminEngine, resolve_engine
 from repro.core import theory
 from repro.core import comm_model
 from repro.core import system_clock
-from repro.core.runtime import (
-    dif_altgdmin_mesh, dec_altgdmin_mesh, dgd_altgdmin_mesh,
-    centralized_altgdmin_mesh, exact_diffusion_mesh, beyond_central_mesh,
-    dif_topk_mesh, dif_quantized_mesh, dif_event_mesh,
-    dif_partial_mesh, dif_stale_mesh, dif_pushsum_mesh,
+from repro.core.program import (
+    SolverProgram, get_program, program_names, register_program,
+    lower_simulator, lower_mesh, lower_virtual_mesh,
 )
+
+# Mesh entry points, derived from the solver programs (the historical
+# hand-written *_mesh closures are gone from repro.core.runtime).
+dif_altgdmin_mesh = lower_mesh(get_program("dif_altgdmin"))
+dec_altgdmin_mesh = lower_mesh(get_program("dec_altgdmin"))
+dgd_altgdmin_mesh = lower_mesh(get_program("dgd_altgdmin"))
+centralized_altgdmin_mesh = lower_mesh(get_program("centralized_altgdmin"))
+exact_diffusion_mesh = lower_mesh(get_program("exact_diffusion"))
+beyond_central_mesh = lower_mesh(get_program("beyond_central"))
+dif_topk_mesh = lower_mesh(get_program("dif_topk"))
+dif_quantized_mesh = lower_mesh(get_program("dif_quantized"))
+dif_event_mesh = lower_mesh(get_program("dif_event"))
+dif_partial_mesh = lower_mesh(get_program("dif_partial"))
+dif_stale_mesh = lower_mesh(get_program("dif_stale"))
+dif_pushsum_mesh = lower_mesh(get_program("dif_pushsum"))
+dif_altgdmin_virtual_mesh = lower_virtual_mesh(get_program("dif_altgdmin"))

@@ -170,6 +170,40 @@ class AltgdminEngine:
         return get_rule(rule).make_sim_masked_state_mixer(
             W, T_con, backend=self.backend, **rule_kw)
 
+    # ------------------------------------------------- virtual mesh combine
+
+    def make_virtual_mixer(self, vt, axis_name: str, T_con: int, *,
+                           rule: str = "gossip"):
+        """The AGREE phase on the virtual-node block tier: a per-device
+        closure ``z (V, d, r) ↦ z'`` running T_con sparse segment-sum
+        rounds (co-located edges on-device, one ppermute per cross-device
+        shift class)."""
+        return get_rule(rule).make_virtual_mesh_mixer(
+            axis_name, vt, T_con, backend=self.backend)
+
+    def make_virtual_state_mixer(self, vt, axis_name: str, T_con: int, *,
+                                 rule: str, **rule_kw):
+        """Stateful virtual-tier combine (compressed/event rules):
+        ``(z, state) ↦ (z', state')`` with the block's stacked public
+        copies as state (``init_state`` on the block slice)."""
+        return get_rule(rule).make_virtual_mesh_state_mixer(
+            axis_name, vt, T_con, backend=self.backend, **rule_kw)
+
+    def make_virtual_masked_mixer(self, vt, axis_name: str, T_con: int, *,
+                                  rule: str):
+        """Availability-masked virtual-tier combine: ``(z, m) ↦ z'``
+        with ``m: (L,)`` replicated on every device."""
+        return get_rule(rule).make_virtual_mesh_masked_mixer(
+            axis_name, vt, T_con, backend=self.backend)
+
+    def make_virtual_masked_state_mixer(self, vt, axis_name: str,
+                                        T_con: int, *, rule: str,
+                                        **rule_kw):
+        """Stateful availability-masked virtual-tier combine
+        (``stale_gossip``): ``(z, state, m) ↦ (z', state')``."""
+        return get_rule(rule).make_virtual_mesh_masked_state_mixer(
+            axis_name, vt, T_con, backend=self.backend, **rule_kw)
+
 
 def resolve_engine(engine=None, backend: str | None = None,
                    blk_d: int = 256) -> AltgdminEngine:

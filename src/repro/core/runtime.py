@@ -1,14 +1,29 @@
-"""AltGDmin on the production mesh — the paper's algorithms with
-nodes = mesh devices and AGREE = collective-permute gossip.
+"""Substrate skeletons for AltGDmin on the production mesh.
 
-This is the hardware counterpart of the simulator in core/altgdmin.py:
-each device holds ONE node's task shard (X_g, y_g) and subspace iterate
-U_g; per outer iteration it solves its local LS, takes the projected-GD
-pre-image, exchanges iterates (or gradients) with its graph neighbours
-via ``lax.ppermute``, and retracts with a local QR.  Numerically
-identical to the simulator run with the same W
-(tests/test_runtime_mesh.py), so every Theorem-1 guarantee transfers
-with γ(W) of the actual topology.
+This module holds the two shard_map iteration skeletons the program
+lowerings in :mod:`repro.core.program` execute on:
+
+  * :func:`_altgdmin_mesh`         — one node per device; per iteration
+    each device solves its local LS, applies the program's update (the
+    combine crossing the wire by ``lax.ppermute``), and retracts with a
+    local QR.  Numerically identical to the simulator run with the same
+    W (tests/test_runtime_mesh.py, tests/test_programs.py), so every
+    Theorem-1 guarantee transfers with γ(W) of the actual topology.
+  * :func:`_altgdmin_virtual_mesh` — the virtual-node block tier
+    (L = devices × block): each device is a small simulator over a
+    contiguous (block, d, r) slab; co-located gossip edges run as
+    on-device segment-sums and one collective-permute crosses the wire
+    per cross-device shift class
+    (:class:`~repro.distributed.consensus.VirtualTopology`).
+
+Neither skeleton knows any solver: the per-iteration update arrives as
+``make_update(eng) -> update(U, aux, min_grad[, xt])`` built by
+:func:`repro.core.program.lower_mesh` /
+:func:`~repro.core.program.lower_virtual_mesh` from a
+:class:`~repro.core.program.SolverProgram`.  The historical per-solver
+``*_mesh`` closures this module used to carry are gone — the program
+registry derives every solver's mesh and virtual-mesh entry points, and
+``tools/check_runtime_clean.py`` guards against them growing back.
 
 Topologies: the consensus layer lowers ANY concrete mixing matrix to
 collective-permutes (``W=`` kwarg — one permute per distinct cyclic
@@ -17,53 +32,17 @@ row; see :func:`repro.distributed.consensus.mesh_weights_from_matrix`).
 Without ``W`` the historical uniform circulant of ``shifts`` /
 ``self_weight`` runs (nearest-neighbour on the ICI torus).
 
-All six registered solvers share one shard_map skeleton
-(:func:`_altgdmin_mesh`) and differ only in the per-iteration update:
-
-  * :func:`dif_altgdmin_mesh` — adapt-then-combine (Algorithm 3);
-  * :func:`dec_altgdmin_mesh` — combine-then-adjust (gossip the
-    gradients [9]);
-  * :func:`dgd_altgdmin_mesh` — DGD's self-excluding neighbour average
-    (Experiment 1 iii);
-  * :func:`centralized_altgdmin_mesh` — fusion center (exact gradient
-    ``psum``, AltGDmin [10]);
-  * :func:`exact_diffusion_mesh` — bias-corrected combine
-    (arXiv:2304.07358; the ψ correction state rides the scan carry);
-  * :func:`beyond_central_mesh` — ``local_steps`` local adapt steps then
-    ONE gossip round (arXiv:2512.22675);
-  * :func:`dif_topk_mesh` / :func:`dif_quantized_mesh` /
-    :func:`dif_event_mesh` — the compressed-wire variants: per gossip
-    round each device encodes its error-compensated iterate (top-k rows
-    / bf16-int8 quantization / event-triggered hold), the COMPACT
-    payload crosses the wire by collective-permute, and the K+1
-    decompressed blocks still merge in ONE fused ``gossip_combine``
-    dispatch; the compression state (error-feedback residual /
-    last-sent iterate) rides the aux scan carry;
-  * :func:`dif_partial_mesh` / :func:`dif_stale_mesh` /
-    :func:`dif_pushsum_mesh` — the dropout-tolerant variants: a
-    (T_GD, L) availability mask rides the scan ``xs`` replicated to
-    every device; down devices are frozen for the iteration and the
-    masked combine rules reroute weight (partial), substitute stale
-    copies (stale), or bias-correct with a push-sum weight carry
-    (pushsum).
-
 The min-B and gradient phases route through the same
 :class:`repro.core.engine.AltgdminEngine` as the simulator (``engine=``/
-``backend=`` kwargs), and the combine phase through the unified
-:class:`~repro.distributed.consensus.CombineRule` mesh lowering: per
-gossip round the K neighbour blocks arrive by collective-permute and are
-merged in ONE fused ``gossip_axpy.gossip_combine`` dispatch on the
-pallas backends (the unfused weighted-sum chain remains the xla-ref /
-float64 exact path) — uniform or per-device weights alike.
-
-The federated property is structural: only Ŭ_g (d×r) crosses the wire;
-X_g, y_g, B_g never leave the device.
+``backend=`` kwargs).  The federated property is structural: only the
+iterate (or the rule's compact payload) crosses the wire; X_g, y_g, B_g
+never leave the device.
 
 Pass ``U_star`` to additionally record the simulator's per-iteration
 metrics (sd_max / sd_mean / consensus spread, via one all-gather of the
-d×r iterate per iteration) and get a full :class:`RunResult` back;
-without it the return is the legacy ``(U_nodes, B_nodes)`` pair and no
-extra collective runs.
+iterate per iteration) and get a full :class:`RunResult` back; without
+it the return is the legacy ``(U_nodes, B_nodes)`` pair and no extra
+collective runs.
 """
 from __future__ import annotations
 
@@ -73,8 +52,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.engine import AltgdminEngine, resolve_engine
 from repro.core.metrics import consensus_spread, subspace_distance
-from repro.core.spectral import _qr_pos
-from repro.distributed.consensus import ExactDiffusionCombine, get_rule
 from repro.utils.compat import shard_map as _shard_map
 
 
@@ -172,55 +149,27 @@ def _altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
                      spread=spread[0], eta=eta)
 
 
-def dif_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                      T_GD: int, T_con: int,
-                      shifts=(-1, 1), self_weight=None, W=None,
-                      engine: AltgdminEngine | None = None,
-                      backend: str | None = None, U_star=None):
-    """Algorithm 3 on the mesh: adapt (local projected-GD pre-image),
-    THEN combine (T_con gossip rounds on the updated iterate), then the
-    QR retraction.  U0: (L, d, r); Xg: (L, tpn, n, d); yg: (L, tpn, n) —
-    leading axis sharded over ``axis_name`` (one node per device).
-    ``W=`` gossips over an arbitrary concrete mixing matrix; otherwise
-    the uniform circulant of ``shifts``/``self_weight``.
-    Returns (U_nodes, B_nodes) with the same layouts, or a
-    :class:`~repro.core.altgdmin.RunResult` when ``U_star`` is given."""
-    L = mesh.shape[axis_name]
-    eta_L = eta * L
-
-    def make_update(eng):
-        gossip = get_rule("gossip").make_mesh_mixer(
-            axis_name, L, T_con, shifts, self_weight, W=W,
-            backend=eng.backend)
-
-        def update(U, aux, mg):
-            _, G = mg(U)
-            U_breve = U - eta_L * G                  # local adapt
-            U_tilde = gossip(U_breve)                # combine (diffusion)
-            return _qr_pos(U_tilde)[0], aux          # projection
-        return update
-
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star)
-
-
-def dif_altgdmin_virtual_mesh(U0, Xg, yg, mesh, axis_name: str, *, vt,
-                              eta: float, T_GD: int, T_con: int,
-                              engine: AltgdminEngine | None = None,
-                              backend: str | None = None, U_star=None):
-    """Algorithm 3 on the VIRTUAL-NODE mesh tier: L = devices × block
-    nodes, each device holding a contiguous (block, d, r) slab of
-    iterates and the matching data shard.  The local min-B/gradient
-    phases run node-batched through the engine exactly like the
-    simulator (a device IS a small simulator over its block); the
-    combine phase is the
+def _altgdmin_virtual_mesh(U0, Xg, yg, mesh, axis_name: str, *, vt,
+                           eta: float, T_GD: int, make_update,
+                           engine: AltgdminEngine | None,
+                           backend: str | None, U_star, init_aux=None,
+                           xs=None):
+    """Shared shard_map skeleton for the VIRTUAL-NODE mesh tier:
+    L = devices × block nodes, each device holding a contiguous
+    (block, d, r) slab of iterates and the matching data shard.  The
+    local min-B/gradient phases run node-batched through the engine
+    exactly like the simulator (a device IS a small simulator over its
+    block); the combine inside the program's update is the
     :class:`~repro.distributed.consensus.VirtualTopology` lowering —
     co-located gossip as an on-device segment-sum shuffle, one
     collective-permute per cross-device edge class.  ``vt`` carries the
     decomposed mixing matrix (``VirtualTopology.from_weights``).
+
+    Same ``make_update``/``init_aux``/``xs`` contract as
+    :func:`_altgdmin_mesh`, except the per-device iterate is the
+    (block, d, r) slab and ``min_grad`` is node-batched over it.
     Federated structure is preserved: only the (block, d, r) iterate
-    slab crosses the wire, never data."""
+    slab (or the rule's compact payload) crosses the wire, never data."""
     from repro.core.altgdmin import RunResult
 
     D = mesh.shape[axis_name]
@@ -228,29 +177,34 @@ def dif_altgdmin_virtual_mesh(U0, Xg, yg, mesh, axis_name: str, *, vt,
     if vt.n_dev != D or vt.n_nodes != L:
         raise ValueError(f"VirtualTopology is {vt.n_dev} dev × {vt.block} "
                          f"block but the run has {D} devices and L={L}")
-    eta_L = eta * L
     eng = resolve_engine(engine, backend)
-    mixer = get_rule("gossip").make_virtual_mesh_mixer(
-        axis_name, vt, T_con, backend=eng.backend)
+    update = make_update(eng)
     with_metrics = U_star is not None
+    has_xs = xs is not None
 
-    def body(U0b, Xb, yb, U_star_):
+    def body(U0b, Xb, yb, U_star_, *rest):
         # U0b: (V, d, r) — this device's block of virtual nodes
-        def step(carry, _):
-            U = carry
-            _, G = eng.min_grad(U, Xb, yb, Xb, yb, same_data=True)
-            U_breve = U - eta_L * G                  # local adapt
-            U_tilde = mixer(U_breve)                 # combine (diffusion)
-            U_new = jax.vmap(lambda u: _qr_pos(u)[0])(U_tilde)
+        def mg(U_):
+            return eng.min_grad(U_, Xb, yb, Xb, yb, same_data=True)
+
+        def step(carry, xt):
+            U, aux = carry
+            if has_xs:
+                U_new, aux_new = update(U, aux, mg, xt)
+            else:
+                U_new, aux_new = update(U, aux, mg)
             if not with_metrics:
-                return U_new, None
+                return (U_new, aux_new), None
             sd = jax.vmap(lambda u: subspace_distance(u, U_star_))(U_new)
             U_all = jax.lax.all_gather(U_new, axis_name)   # (D, V, d, r)
             spread = consensus_spread(
                 U_all.reshape(L, *U_all.shape[2:]))
-            return U_new, (sd, spread)
+            return (U_new, aux_new), (sd, spread)
 
-        U_fin, metrics = jax.lax.scan(step, U0b, None, length=T_GD)
+        aux0 = init_aux(U0b) if init_aux is not None else None
+        xseq = rest[0] if has_xs else None
+        (U_fin, _), metrics = jax.lax.scan(
+            step, (U0b, aux0), xseq, length=None if has_xs else T_GD)
         B_fin = eng.minimize_B(U_fin, Xb, yb)
         if not with_metrics:
             return U_fin, B_fin
@@ -260,13 +214,14 @@ def dif_altgdmin_virtual_mesh(U0, Xg, yg, mesh, axis_name: str, *, vt,
     sharded = P(axis_name)
     out_specs = ((sharded,) * 4) if with_metrics else (sharded, sharded)
     run = _shard_map(body, mesh=mesh,
-                     in_specs=(sharded, sharded, sharded, P()),
+                     in_specs=(sharded, sharded, sharded, P())
+                     + ((P(),) if has_xs else ()),
                      out_specs=out_specs,
                      axis_names={axis_name},
                      check_rep=not eng.fused)
 
     U_dummy = U0[0] if U_star is None else U_star
-    out = run(U0, Xg, yg, U_dummy)
+    out = run(U0, Xg, yg, U_dummy, *((xs,) if has_xs else ()))
     if not with_metrics:
         return out
     U_fin, B_fin, sd, spread = out       # sd: (D, T_GD, V), spread: (D, T)
@@ -274,363 +229,3 @@ def dif_altgdmin_virtual_mesh(U0, Xg, yg, mesh, axis_name: str, *, vt,
                      sd_max=jnp.max(sd, axis=(0, 2)),
                      sd_mean=jnp.mean(sd, axis=(0, 2)),
                      spread=spread[0], eta=eta)
-
-
-def dec_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                      T_GD: int, T_con: int,
-                      shifts=(-1, 1), self_weight=None, W=None,
-                      engine: AltgdminEngine | None = None,
-                      backend: str | None = None, U_star=None):
-    """Dec-AltGDmin [9] on the mesh: combine-then-adjust — T_con gossip
-    rounds on the *gradients*, then the projected-GD step with the
-    gossiped estimate.  Same layouts/returns/topology kwargs as
-    :func:`dif_altgdmin_mesh`."""
-    L = mesh.shape[axis_name]
-    eta_L = eta * L
-
-    def make_update(eng):
-        gossip = get_rule("gossip").make_mesh_mixer(
-            axis_name, L, T_con, shifts, self_weight, W=W,
-            backend=eng.backend)
-
-        def update(U, aux, mg):
-            _, G = mg(U)
-            G_hat = gossip(G)                        # consensus on grads
-            return _qr_pos(U - eta_L * G_hat)[0], aux
-        return update
-
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star)
-
-
-def dgd_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                      T_GD: int, T_con: int = 1,
-                      shifts=(-1, 1), self_weight=None, W=None,
-                      engine: AltgdminEngine | None = None,
-                      backend: str | None = None, U_star=None):
-    """DGD-variation on the mesh (Experiment 1 iii):
-    Ũ_g ← QR((1/deg_g) Σ_{g'∈N_g} U_g' − η ∇f_g) — ONE self-excluding
-    neighbour exchange per iteration.  Without ``W`` the circulant graph
-    of ``shifts`` is K-regular, so the simulator's (1/deg) adjacency
-    average is exactly the equal-weight shift average; pass ``W=`` the
-    precomputed row-stochastic neighbour matrix (adj/deg, zero diagonal)
-    for irregular graphs.  ``T_con``/``self_weight`` are accepted for
-    signature uniformity and ignored: the rule is a single round with
-    structurally zero self weight."""
-    L = mesh.shape[axis_name]
-
-    def make_update(eng):
-        nbr_mix = get_rule("neighbor").make_mesh_mixer(
-            axis_name, L, 1, shifts, W=W, backend=eng.backend)
-
-        def update(U, aux, mg):
-            _, G = mg(U)
-            return _qr_pos(nbr_mix(U) - eta * G)[0], aux
-        return update
-
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star)
-
-
-def centralized_altgdmin_mesh(U0, Xg, yg, mesh, axis_name: str, *,
-                              eta: float, T_GD: int, T_con: int = 0,
-                              shifts=(), self_weight=None, W=None,
-                              engine: AltgdminEngine | None = None,
-                              backend: str | None = None, U_star=None):
-    """AltGDmin [10] with a fusion center on the mesh: every device
-    computes its local gradient, the exact sum arrives by one ``psum``
-    (the all-reduce the fusion center amounts to), and all devices take
-    the identical projected-GD step.  U0's node axis is broadcast from
-    node 0 so every device starts (and stays) on the same iterate —
-    the returned U_nodes rows are all equal to the simulator's single U.
-    ``T_con``/``shifts``/``self_weight``/``W`` are accepted for mesh_fn
-    signature uniformity and ignored (no graph: the combine is exact)."""
-    U0 = jnp.broadcast_to(U0[:1], U0.shape)
-
-    def make_update(eng):
-        def update(U, aux, mg):
-            _, G = mg(U)
-            grad = jax.lax.psum(G, axis_name)        # fusion-center sum
-            return _qr_pos(U - eta * grad)[0], aux
-        return update
-
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star)
-
-
-def exact_diffusion_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                         T_GD: int, T_con: int,
-                         shifts=(-1, 1), self_weight=None, W=None,
-                         engine: AltgdminEngine | None = None,
-                         backend: str | None = None, U_star=None):
-    """Exact Subspace Diffusion (arXiv:2304.07358) on the mesh:
-    adapt-correct-combine.  The previous adapt state ψ rides the scan
-    carry as ONE extra (d, r) buffer per device; per iteration
-    ψ = U − ηL∇f, φ = ψ + U − ψ_prev (the bias correction — vanishing at
-    τ=0 where ψ_prev = U0), then T_con gossip rounds on φ and the QR
-    retraction.  Same layouts/returns/topology kwargs as
-    :func:`dif_altgdmin_mesh`."""
-    L = mesh.shape[axis_name]
-    eta_L = eta * L
-
-    def make_update(eng):
-        gossip = get_rule("exact_diffusion").make_mesh_mixer(
-            axis_name, L, T_con, shifts, self_weight, W=W,
-            backend=eng.backend)
-
-        def update(U, psi_prev, mg):
-            _, G = mg(U)
-            psi = U - eta_L * G                          # adapt
-            phi = ExactDiffusionCombine.correct(psi, psi_prev, U)
-            return _qr_pos(gossip(phi))[0], psi          # combine+project
-        return update
-
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star,
-                          init_aux=lambda U: U)
-
-
-def beyond_central_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                        T_GD: int, T_con: int = 1, local_steps: int = 1,
-                        shifts=(-1, 1), self_weight=None, W=None,
-                        engine: AltgdminEngine | None = None,
-                        backend: str | None = None, U_star=None):
-    """Beyond Centralization (arXiv:2512.22675) on the mesh:
-    ``local_steps`` full local adapt steps (fused min-B + projected GD +
-    retraction, no communication) per outer iteration, then ONE gossip
-    round — the wire carries a single d×r exchange per iteration
-    regardless of ``T_con`` (which the combine rule ignores by
-    construction).  Same layouts/returns/topology kwargs as
-    :func:`dif_altgdmin_mesh`."""
-    L = mesh.shape[axis_name]
-    eta_L = eta * L
-
-    def make_update(eng):
-        mix1 = get_rule("beyond_central").make_mesh_mixer(
-            axis_name, L, T_con, shifts, self_weight, W=W,
-            backend=eng.backend)
-
-        def update(U, aux, mg):
-            for _ in range(local_steps):             # local adapt epoch
-                _, G = mg(U)
-                U = _qr_pos(U - eta_L * G)[0]
-            return _qr_pos(mix1(U))[0], aux          # one combine round
-        return update
-
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star)
-
-
-# ----------------------------------------------------------------------
-# compressed-wire variants (stateful consensus rules)
-# ----------------------------------------------------------------------
-
-def _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name: str, *,
-                         rule_name: str, eta: float, T_GD: int, T_con: int,
-                         shifts=(-1, 1), self_weight=None, W=None,
-                         engine: AltgdminEngine | None = None,
-                         backend: str | None = None, U_star=None,
-                         **rule_kw):
-    """Adapt-then-combine over a STATEFUL compressed combine rule: the
-    rule's per-device compression state (error-feedback residual /
-    last-sent iterate, kept node-batched with N = 1 so the encode is
-    substrate-independent) rides the shared skeleton's aux scan carry.
-    Per gossip round only the rule's compact payload crosses the wire;
-    the K+1 decompressed blocks merge in ONE fused ``gossip_combine``
-    dispatch on the pallas backends."""
-    L = mesh.shape[axis_name]
-    eta_L = eta * L
-    rule = get_rule(rule_name)
-
-    def make_update(eng):
-        mix = rule.make_mesh_state_mixer(
-            axis_name, L, T_con, shifts, self_weight, W=W,
-            backend=eng.backend, **rule_kw)
-
-        def update(U, cstate, mg):
-            _, G = mg(U)
-            U_breve = U - eta_L * G                  # local adapt
-            U_tilde, cstate = mix(U_breve, cstate)   # compressed diffusion
-            return _qr_pos(U_tilde)[0], cstate       # projection
-        return update
-
-    # one neighbour-copy buffer per distinct cyclic shift of the topology
-    n_shifts = len(rule._mesh_weights(L, shifts, self_weight, W)[0])
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star,
-                          init_aux=lambda U: rule.init_mesh_state(
-                              U, n_shifts, **rule_kw))
-
-
-def dif_topk_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                  T_GD: int, T_con: int, compression_k: int = 0,
-                  consensus_gamma: float = 1.0,
-                  shifts=(-1, 1), self_weight=None, W=None,
-                  engine: AltgdminEngine | None = None,
-                  backend: str | None = None, U_star=None):
-    """``dif_topk`` on the mesh: each gossip round permutes only the
-    ``compression_k`` (0 → d/4) largest-norm rows + their int32 indices
-    of the error-compensated iterate.  Same layouts/returns/topology
-    kwargs as :func:`dif_altgdmin_mesh`."""
-    return _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name,
-                                rule_name="topk_gossip", eta=eta,
-                                T_GD=T_GD, T_con=T_con, shifts=shifts,
-                                self_weight=self_weight, W=W, engine=engine,
-                                backend=backend, U_star=U_star,
-                                compression_k=compression_k,
-                                consensus_gamma=consensus_gamma)
-
-
-def dif_quantized_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                       T_GD: int, T_con: int, compression: str | None = None,
-                       consensus_gamma: float = 1.0,
-                       shifts=(-1, 1), self_weight=None, W=None,
-                       engine: AltgdminEngine | None = None,
-                       backend: str | None = None, U_star=None):
-    """``dif_quantized`` on the mesh: the permuted payload is the
-    low-precision wire cast (``compression``: bf16 default / int8 /
-    int8_stochastic) of the error-compensated iterate; accumulation
-    stays f32.  Same layouts/returns/topology kwargs as
-    :func:`dif_altgdmin_mesh`."""
-    return _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name,
-                                rule_name="quantized_gossip", eta=eta,
-                                T_GD=T_GD, T_con=T_con, shifts=shifts,
-                                self_weight=self_weight, W=W, engine=engine,
-                                backend=backend, U_star=U_star,
-                                compression=compression,
-                                consensus_gamma=consensus_gamma)
-
-
-def dif_event_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                   T_GD: int, T_con: int, event_threshold: float = 0.0,
-                   consensus_gamma: float = 1.0,
-                   shifts=(-1, 1), self_weight=None, W=None,
-                   engine: AltgdminEngine | None = None,
-                   backend: str | None = None, U_star=None):
-    """``dif_event`` on the mesh: a device re-broadcasts its iterate only
-    when it moved more than θ·‖U_g‖_F since the last send (the SPMD
-    program still executes the permute every round — the saving is a
-    message-count one on real event-driven networks).  θ = 0 recovers
-    :func:`dif_altgdmin_mesh` bit-identically."""
-    return _compressed_dif_mesh(U0, Xg, yg, mesh, axis_name,
-                                rule_name="event_gossip", eta=eta,
-                                T_GD=T_GD, T_con=T_con, shifts=shifts,
-                                self_weight=self_weight, W=W, engine=engine,
-                                backend=backend, U_star=U_star,
-                                event_threshold=event_threshold,
-                                consensus_gamma=consensus_gamma)
-
-
-# ----------------------------------------------------------------------
-# dropout-tolerant variants (availability-masked consensus rules)
-# ----------------------------------------------------------------------
-
-def _masked_dif_mesh(U0, Xg, yg, mesh, axis_name: str, *, rule_name: str,
-                     eta: float, T_GD: int, T_con: int, avail=None,
-                     shifts=(-1, 1), self_weight=None, W=None,
-                     engine: AltgdminEngine | None = None,
-                     backend: str | None = None, U_star=None):
-    """Adapt-then-combine under a per-iteration availability mask
-    ``avail: (T_GD, L)`` (truthy = live), replicated to every device and
-    riding the skeleton's scan ``xs``.  Down devices still execute the
-    SPMD program (a static schedule cannot elide a step) but their
-    iterate is frozen for the iteration and the masked combine rule
-    routes weight/stale-copies/push-sum mass around them — the simulated
-    system clock prices the time they actually save.  ``avail=None``
-    reproduces the dense mesh solver (bit-for-bit for ``partial_gossip``
-    / ``stale_gossip``)."""
-    L = mesh.shape[axis_name]
-    eta_L = eta * L
-    rule = get_rule(rule_name)
-    stateful = rule_name == "stale_gossip"
-    if avail is None:
-        avail = jnp.ones((T_GD, L), bool)
-    avail = jnp.asarray(avail).astype(bool)
-    if avail.shape != (T_GD, L):
-        raise ValueError(f"availability mask {avail.shape} does not "
-                         f"match (T_GD, L) = ({T_GD}, {L})")
-
-    def make_update(eng):
-        if stateful:
-            mix = rule.make_mesh_masked_state_mixer(
-                axis_name, L, T_con, shifts, self_weight, W=W,
-                backend=eng.backend)
-        else:
-            mix = rule.make_mesh_masked_mixer(
-                axis_name, L, T_con, shifts, self_weight, W=W,
-                backend=eng.backend)
-
-        def update(U, aux, mg, m):
-            g = jax.lax.axis_index(axis_name)
-            _, G = mg(U)
-            U_breve = U - eta_L * G                  # local adapt
-            if stateful:
-                U_tilde, aux = mix(U_breve, aux, m)
-            else:
-                U_tilde = mix(U_breve, m)
-            # down this iteration: frozen (no adapt/combine/retraction)
-            U_new = jnp.where(m[g], _qr_pos(U_tilde)[0], U)
-            return U_new, aux
-        return update
-
-    init_aux = (lambda U: rule.init_mesh_state(U)) if stateful else None
-    return _altgdmin_mesh(U0, Xg, yg, mesh, axis_name, eta=eta, T_GD=T_GD,
-                          make_update=make_update, engine=engine,
-                          backend=backend, U_star=U_star,
-                          init_aux=init_aux, xs=avail)
-
-
-def dif_partial_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                     T_GD: int, T_con: int, avail=None,
-                     shifts=(-1, 1), self_weight=None, W=None,
-                     engine: AltgdminEngine | None = None,
-                     backend: str | None = None, U_star=None):
-    """``dif_partial`` on the mesh: per gossip round each device zeroes
-    the weights of links with a down endpoint and folds the lost mass
-    into its self weight (its row of the masked mixing matrix).  Full
-    availability reproduces :func:`dif_altgdmin_mesh` bit-for-bit."""
-    return _masked_dif_mesh(U0, Xg, yg, mesh, axis_name,
-                            rule_name="partial_gossip", eta=eta,
-                            T_GD=T_GD, T_con=T_con, avail=avail,
-                            shifts=shifts, self_weight=self_weight, W=W,
-                            engine=engine, backend=backend, U_star=U_star)
-
-
-def dif_stale_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                   T_GD: int, T_con: int, avail=None,
-                   shifts=(-1, 1), self_weight=None, W=None,
-                   engine: AltgdminEngine | None = None,
-                   backend: str | None = None, U_star=None):
-    """``dif_stale`` on the mesh: each device's last-published copy
-    rides the aux scan carry (ONE extra d×r buffer); a down neighbour's
-    permuted payload is its stale copy, combined with the DENSE weights.
-    Full availability reproduces :func:`dif_altgdmin_mesh`
-    bit-for-bit."""
-    return _masked_dif_mesh(U0, Xg, yg, mesh, axis_name,
-                            rule_name="stale_gossip", eta=eta,
-                            T_GD=T_GD, T_con=T_con, avail=avail,
-                            shifts=shifts, self_weight=self_weight, W=W,
-                            engine=engine, backend=backend, U_star=U_star)
-
-
-def dif_pushsum_mesh(U0, Xg, yg, mesh, axis_name: str, *, eta: float,
-                     T_GD: int, T_con: int, avail=None,
-                     shifts=(-1, 1), self_weight=None, W=None,
-                     engine: AltgdminEngine | None = None,
-                     backend: str | None = None, U_star=None):
-    """``dif_pushsum`` on the mesh: each live device renormalizes its
-    own column of the masked matrix (requires symmetric W — validated),
-    pre-scales its (iterate, weight-scalar) payload, and the readout
-    z/w bias-corrects the directed masked topology.  Full availability
-    matches :func:`dif_altgdmin_mesh` to float round-off."""
-    return _masked_dif_mesh(U0, Xg, yg, mesh, axis_name,
-                            rule_name="push_sum_gossip", eta=eta,
-                            T_GD=T_GD, T_con=T_con, avail=avail,
-                            shifts=shifts, self_weight=self_weight, W=W,
-                            engine=engine, backend=backend, U_star=U_star)

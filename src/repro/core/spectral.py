@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.agree import agree
+from repro.distributed.consensus import maybe_sparsify
 
 
 class SpectralInit(NamedTuple):
@@ -41,7 +42,15 @@ def decentralized_spectral_init(key: jax.Array, Xg: jax.Array, yg: jax.Array,
                                 W: jax.Array, *, kappa: float, mu: float,
                                 r: int, T_pm: int, T_con: int,
                                 broadcast: bool = True) -> SpectralInit:
-    """Xg: (L, tpn, n, d) node-major designs, yg: (L, tpn, n), W: (L, L)."""
+    """Xg: (L, tpn, n, d) node-major designs, yg: (L, tpn, n), W: (L, L).
+
+    Every AGREE here (the α threshold, the power-iteration combines, the
+    node-0 broadcast) routes through :func:`maybe_sparsify`, so at scale
+    (L ≥ 512, sparse graph) the init's consensus rounds run on the same
+    padded-COO segment-sum lowering as the solver programs instead of
+    dense (L, L) matmuls — identical arithmetic per round (pinned ≤1e-12
+    in tests/test_sparse.py)."""
+    W = maybe_sparsify(W)
     L, tpn, n, d = Xg.shape
     T = L * tpn
     dtype = Xg.dtype

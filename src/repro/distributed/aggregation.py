@@ -14,7 +14,18 @@ chains; 'allreduce' lowers to one all-reduce (the fusion-center baseline).
 | consensus   | Dec-AltGDmin [9]       | T_con permutes of *grads*  |
 | diffusion   | Dif-AltGDmin (paper)   | T_con permutes of *params* |
 | dgd         | DGD-variant (Exp. 1)   | 1 permute of params        |
+| topk        | Dif-AltGDmin + top-k   | T_con permutes, k entries  |
+| quantized   | Dif-AltGDmin + quant   | T_con permutes, low-bit    |
 | local       | no communication       | —                          |
+
+The compressed strategies are the trainer-side counterparts of the
+``topk_gossip`` / ``quantized_gossip`` CombineRules: the exchange runs
+the stateless form of the compressor (top-k magnitude sparsification of
+the sent copy; bfloat16 wire cast), and :func:`comm_bytes_per_step`
+prices the step from the rule's actual :class:`CommSignature` — the
+compact payload, not the dense ``wire_dtype`` scalar count.  (The
+error-feedback state the consensus-layer rules carry lives in the
+solver scan; the trainer hooks are stateless by design.)
 
 The *federated carve-out*: parameter groups matching ``local_patterns``
 (task heads, embeddings) are never communicated — they remain node-local,
@@ -31,12 +42,14 @@ import jax.numpy as jnp
 from repro.distributed import consensus as _consensus
 from repro.distributed.gossip import roll_gossip
 
-STRATEGIES = ("allreduce", "diffusion", "consensus", "dgd", "local")
+STRATEGIES = ("allreduce", "diffusion", "consensus", "dgd", "topk",
+              "quantized", "local")
 
 # every strategy is one CombineRule applied to grads or params; the rule's
 # CommSignature prices the wire cost (comm_bytes_per_step below)
 RULE_FOR_STRATEGY = {"allreduce": "central", "diffusion": "gossip",
                      "consensus": "gossip", "dgd": "neighbor",
+                     "topk": "topk_gossip", "quantized": "quantized_gossip",
                      "local": "none"}
 
 
@@ -50,11 +63,19 @@ class AggregationConfig:
     wire_dtype: str | None = None    # cast to this dtype for the exchange
     #   (e.g. "bfloat16": halves gossip bytes; mixing still in f32 —
     #   a beyond-paper §Perf knob)
+    compression_k: int = 0           # topk: entries kept per leaf (0 → ¼)
+    compression: str | None = None   # quantized: wire format (None → bf16)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}; "
                              f"choose from {STRATEGIES}")
+        if self.compression_k and self.strategy != "topk":
+            raise ValueError("compression_k only applies to the 'topk' "
+                             f"strategy, not {self.strategy!r}")
+        if self.compression is not None and self.strategy != "quantized":
+            raise ValueError("compression only applies to the 'quantized' "
+                             f"strategy, not {self.strategy!r}")
 
 
 def _path_str(path) -> str:
@@ -83,6 +104,24 @@ def _mix(tree, mask, mix_fn, wire_dtype=None):
     return jax.tree.map(lambda m, a, b: a if m else b, mask, mixed, tree)
 
 
+def _topk_sparsify(tree, k: int):
+    """Stateless top-k compressor for the trainer exchange: every node
+    keeps only its ``k`` largest-magnitude entries per leaf (0 → a
+    quarter of the leaf, the ``topk_gossip`` rule's ``d // 4`` default)
+    and sends zeros elsewhere.  The consensus-layer rule additionally
+    carries error feedback in the solver scan state; the trainer hook is
+    its memoryless form."""
+    def spars(x):
+        flat = x.reshape(x.shape[0], -1)          # (nodes, m)
+        m = flat.shape[1]
+        kk = min(int(k) or max(1, m // 4), m)
+        if kk == m:
+            return x
+        kth = jax.lax.top_k(jnp.abs(flat), kk)[0][:, -1:]
+        return jnp.where(jnp.abs(flat) >= kth, flat, 0.0).reshape(x.shape)
+    return jax.tree.map(spars, tree)
+
+
 def _node_mean(tree):
     """Exact mean over the node axis, broadcast back (→ all-reduce)."""
     return jax.tree.map(_consensus.node_mean, tree)
@@ -104,11 +143,15 @@ def aggregate_gradients(grads, agg: AggregationConfig):
 def aggregate_params(params, agg: AggregationConfig):
     """Post-optimizer parameter communication (diffusion / dgd)."""
     mask = _split_local(params, agg.local_patterns)
-    if agg.strategy == "diffusion":
-        return _mix(params, mask,
-                    lambda t: roll_gossip(t, agg.t_con, agg.shifts,
-                                          agg.self_weight),
-                    agg.wire_dtype)
+    if agg.strategy in ("diffusion", "topk", "quantized"):
+        wire = agg.wire_dtype
+        if agg.strategy == "quantized" and wire is None:
+            wire = "bfloat16"        # the rule's default bf16 wire format
+        def mix_fn(t):
+            if agg.strategy == "topk":
+                t = _topk_sparsify(t, agg.compression_k)
+            return roll_gossip(t, agg.t_con, agg.shifts, agg.self_weight)
+        return _mix(params, mask, mix_fn, wire)
     if agg.strategy == "dgd":
         # neighbour average EXCLUDING self (paper Experiment 1 formula)
         return _mix(params, mask,
@@ -131,8 +174,16 @@ def comm_bytes_per_step(n_params_communicated: int, itemsize: int,
     """Analytic per-step communication volume (for the benchmark tables):
     bytes sent per node per step, from the strategy's CombineRule
     signature (gossip: t_con rounds × deg messages; neighbor: one
-    exchange; central: the ring all-reduce volume)."""
-    sig = _consensus.get_rule(RULE_FOR_STRATEGY[agg.strategy]
-                              ).signature(agg.t_con)
+    exchange; central: the ring all-reduce volume).
+
+    The payload context (the communicated entry count plus the config's
+    compression knobs) is forwarded to the rule's ``signature``, so the
+    compressed strategies price their actual wire format — top-k: k
+    values + k indices per round; quantized: bf16/int8 entries — instead
+    of the dense ``n_params × itemsize`` product.  Base rules ignore the
+    context (see :meth:`CombineRule.signature`)."""
+    sig = _consensus.get_rule(RULE_FOR_STRATEGY[agg.strategy]).signature(
+        agg.t_con, d=n_params_communicated, r=1,
+        compression_k=agg.compression_k, compression=agg.compression)
     return sig.bytes_per_iter(n_params_communicated, itemsize, n_nodes,
                               degree=len(agg.shifts))

@@ -552,25 +552,53 @@ class VirtualTopology:
         return len(self.dev_shifts)
 
 
+def _device_slice(arrays, g):
+    """This device's slice of :func:`virtual_arrays`'s stacked operands:
+    ``(lr, lc, lv, [cr_k...], [cc_k...], [cv_k...], dg)`` — the selected
+    form every virtual round variant (dense / masked / state) consumes,
+    so the per-rule lowerings never re-derive the gather."""
+    lr, lc, lv, cr, cc, cv, dg = arrays
+    S = cr.shape[0]
+    return (lr[g], lc[g], lv[g],
+            [cr[k][g] for k in range(S)],
+            [cc[k][g] for k in range(S)],
+            [cv[k][g] for k in range(S)],
+            dg[g])
+
+
+def _virtual_selected_round(zf, vt: VirtualTopology, axis_name: str,
+                            sel, *, z_diag=None):
+    """One combine round on the virtual-node tier with PRE-SELECTED
+    (possibly mask-folded or column-normalized) per-device edge arrays
+    ``sel`` (:func:`_device_slice` layout).  ``zf: (V, F)`` is this
+    device's flattened block — it is both the ppermute payload and the
+    off-diagonal operand; ``z_diag`` (default ``zf``) is the operand of
+    the diagonal term, split out for the compressed rules' exact-self
+    correction (off-diagonal mass on the refreshed public copies, the
+    self weight on the true iterate)."""
+    lr, lc, lv, crs, ccs, cvs, dg = sel
+    V, D = vt.block, vt.n_dev
+    acc = dg[:, None] * (zf if z_diag is None else z_diag)
+    acc = acc + jax.ops.segment_sum(
+        lv[:, None] * zf[lc], lr, num_segments=V + 1,
+        indices_are_sorted=True)[:V]
+    for k, s in enumerate(vt.dev_shifts):
+        perm = [(i, (i - s) % D) for i in range(D)]   # receive from i+s
+        zs = jax.lax.ppermute(zf, axis_name, perm)
+        acc = acc + jax.ops.segment_sum(
+            cvs[k][:, None] * zs[ccs[k]], crs[k],
+            num_segments=V + 1, indices_are_sorted=True)[:V]
+    return acc
+
+
 def virtual_mesh_round(zf, g, vt: VirtualTopology, axis_name: str,
                        arrays):
     """One gossip round on the virtual-node tier, ``zf: (V, F)`` this
     device's flattened block.  ``arrays`` are the device-side copies of
     vt's edge arrays in ``zf.dtype`` (built once per trace by
     :func:`virtual_arrays`)."""
-    lr, lc, lv, cr, cc, cv, dg = arrays
-    V, D = vt.block, vt.n_dev
-    acc = dg[g][:, None] * zf
-    acc = acc + jax.ops.segment_sum(
-        lv[g][:, None] * zf[lc[g]], lr[g], num_segments=V + 1,
-        indices_are_sorted=True)[:V]
-    for k, s in enumerate(vt.dev_shifts):
-        perm = [(i, (i - s) % D) for i in range(D)]   # receive from i+s
-        zs = jax.lax.ppermute(zf, axis_name, perm)
-        acc = acc + jax.ops.segment_sum(
-            cv[k][g][:, None] * zs[cc[k][g]], cr[k][g],
-            num_segments=V + 1, indices_are_sorted=True)[:V]
-    return acc
+    return _virtual_selected_round(zf, vt, axis_name,
+                                   _device_slice(arrays, g))
 
 
 def virtual_arrays(vt: VirtualTopology, dtype):
@@ -581,6 +609,70 @@ def virtual_arrays(vt: VirtualTopology, dtype):
             jnp.asarray(vt.cross_rows), jnp.asarray(vt.cross_cols),
             jnp.asarray(vt.cross_vals, dtype),
             jnp.asarray(vt.diag, dtype))
+
+
+def _virtual_masked_fold(vt: VirtualTopology, sel, g, mf, *,
+                         fold_diag: bool = True):
+    """Edge-level availability fold on a device's selected arrays — the
+    virtual-tier twin of :func:`_sparse_masked_fold`: a link is live iff
+    BOTH endpoints are (receiver mask rows ``mf[g]``, sender mask rows
+    ``mf[(g+s) mod D]`` per cross class), dead links' weight folds into
+    the receiver's diagonal (``fold_diag=False`` keeps the original
+    diagonal for push-sum, which renormalizes instead).  ``mf`` is the
+    (D, V) per-device mask in the value dtype.  Padding entries carry
+    weight exactly 0, so their clamped gathers contribute nothing."""
+    lr, lc, lv, crs, ccs, cvs, dg = sel
+    V, D = vt.block, vt.n_dev
+    mg = mf[g]
+    keep = mg[lr] * mg[lc]
+    lv_m = lv * keep
+    lost = jax.ops.segment_sum(lv * (1.0 - keep), lr,
+                               num_segments=V + 1,
+                               indices_are_sorted=True)[:V]
+    cvs_m = []
+    for k, s in enumerate(vt.dev_shifts):
+        ms = mf[(g + s) % D]                    # the class's sender block
+        keep_k = mg[crs[k]] * ms[ccs[k]]
+        cvs_m.append(cvs[k] * keep_k)
+        lost = lost + jax.ops.segment_sum(
+            cvs[k] * (1.0 - keep_k), crs[k], num_segments=V + 1,
+            indices_are_sorted=True)[:V]
+    dg_eff = dg + lost if fold_diag else dg
+    return (lr, lc, lv_m, crs, ccs, cvs_m, dg_eff)
+
+
+def _vt_edges(vt: VirtualTopology):
+    """Reconstruct the GLOBAL off-diagonal COO (rows, cols, vals) a
+    VirtualTopology encodes, padding excluded — host-side metadata for
+    structural checks (push-sum's symmetry validation)."""
+    D, V = vt.n_dev, vt.block
+    rows, cols, vals = [], [], []
+    for g in range(D):
+        live = vt.local_rows[g] != V
+        rows.append(g * V + vt.local_rows[g][live])
+        cols.append(g * V + vt.local_cols[g][live])
+        vals.append(vt.local_vals[g][live])
+    for k, s in enumerate(vt.dev_shifts):
+        for g in range(D):
+            live = vt.cross_rows[k, g] != V
+            rows.append(g * V + vt.cross_rows[k, g][live])
+            cols.append(((g + s) % D) * V + vt.cross_cols[k, g][live])
+            vals.append(vt.cross_vals[k, g][live])
+    return (np.concatenate(rows).astype(np.int64),
+            np.concatenate(cols).astype(np.int64),
+            np.concatenate(vals))
+
+
+def _vt_is_symmetric(vt: VirtualTopology) -> bool:
+    """Whether the encoded mixing matrix is symmetric: the sorted edge
+    list equals the sorted transposed edge list (values to float
+    tolerance) — O(E log E), never densified."""
+    r, c, v = _vt_edges(vt)
+    o1 = np.lexsort((c, r))       # (r, c) order of the edge list
+    o2 = np.lexsort((r, c))       # (c, r) order = (r, c) of the transpose
+    return (np.array_equal(r[o1], c[o2])
+            and np.array_equal(c[o1], r[o2])
+            and np.allclose(v[o1], v[o2]))
 
 
 # ----------------------------------------------------------------------
@@ -615,6 +707,14 @@ class CombineRule:
                         self_weight: float | None = None, *,
                         W=None, backend: str = "xla-ref") -> Callable:
         raise NotImplementedError
+
+    # ---------------------------------------------------- virtual mesh
+
+    def make_virtual_mesh_mixer(self, axis_name: str,
+                                vt: VirtualTopology, T_con: int, *,
+                                backend: str = "xla-ref") -> Callable:
+        raise NotImplementedError(
+            f"combine rule {self.name!r} has no virtual-mesh lowering")
 
     # ------------------------------------------------------- signature
 
@@ -819,6 +919,23 @@ class NeighborCombine(CombineRule):
         return lambda z: self._mesh_round(z, axis_name, L, shifts_,
                                           weights, backend)
 
+    def make_virtual_mesh_mixer(self, axis_name: str,
+                                vt: VirtualTopology, T_con: int = 1, *,
+                                backend: str = "xla-ref") -> Callable:
+        """ONE neighbour-average round on the virtual tier, whatever
+        ``T_con`` says (the rule IS a single self-excluding exchange).
+        ``vt`` decomposes the precomputed row-stochastic neighbour
+        matrix — its zero diagonal survives the decomposition as a zero
+        ``diag`` plane, so the round is exactly ``M Z``."""
+        def mix(z):
+            g = jax.lax.axis_index(axis_name)
+            arrays = virtual_arrays(vt, z.dtype)
+            shape = z.shape
+            out = virtual_mesh_round(z.reshape(vt.block, -1), g, vt,
+                                     axis_name, arrays)
+            return out.reshape(shape)
+        return mix
+
     def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("neighbor", 1)
 
@@ -897,6 +1014,11 @@ class BeyondCentralCombine(GossipCombine):
                         self_weight=None, *, W=None, backend="xla-ref"):
         return super().make_mesh_mixer(axis_name, L, 1, shifts,
                                        self_weight, W=W, backend=backend)
+
+    def make_virtual_mesh_mixer(self, axis_name, vt, T_con=1, *,
+                                backend="xla-ref"):
+        return super().make_virtual_mesh_mixer(axis_name, vt, 1,
+                                               backend=backend)
 
     def signature(self, T_con: int, **params) -> CommSignature:
         return CommSignature("gossip", 1)
@@ -1021,6 +1143,11 @@ class CompressedGossipCombine(GossipCombine):
         raise TypeError(f"combine rule {self.name!r} is stateful; use "
                         f"make_mesh_state_mixer / init_mesh_state")
 
+    def make_virtual_mesh_mixer(self, axis_name, vt, T_con, *,
+                                backend="xla-ref"):
+        raise TypeError(f"combine rule {self.name!r} is stateful; use "
+                        f"make_virtual_mesh_state_mixer / init_state")
+
     def make_sim_state_mixer(self, W, T_con: int, *,
                              backend: str = "xla-ref", **kw) -> Callable:
         """Simulator closure ``(Z (L, d, r), state) ↦ (Z', state')``:
@@ -1142,6 +1269,54 @@ class CompressedGossipCombine(GossipCombine):
                 st2 = ((own2, nbr2, count + 1)
                        if self._stochastic(**kw) else (own2, nbr2))
                 return (z2, st2), None
+
+            (z_fin, st_fin), _ = jax.lax.scan(round_, (z, state), None,
+                                              length=T_con)
+            return z_fin, st_fin
+        return mix
+
+    def make_virtual_mesh_state_mixer(self, axis_name: str, vt, T_con: int,
+                                      *, backend: str = "xla-ref",
+                                      **kw) -> Callable:
+        """Per-device virtual-tier closure ``(z (V, d, r), state) ↦
+        (z', state')`` with ``state`` the block's stacked public copies
+        from ``init_state`` (zero, per virtual node).  Each round
+        refreshes the block's copies — GLOBAL node ids ``g·V + [0, V)``
+        keep the stochastic quantizer's per-node fold_in identical to
+        the simulator's ``arange(L)`` — then runs one sparse segment-sum
+        round on the refreshed copies with the diagonal applied to the
+        EXACT iterate (the simulator's exact-self identity ``(W − diag)
+        x̂' + diag·Z``).  The wire note: a cross-device shift class
+        ships the whole refreshed block; the per-edge payload is still
+        the compact refresh semantically, the block transport just
+        batches it.  ``consensus_gamma`` relaxes as on the other
+        lowerings (γ = 1 → no-op)."""
+        gamma = float(kw.pop("consensus_gamma", 1.0))
+        if T_con == 0:
+            return lambda z, state: (z, state)
+
+        def mix(z, state):
+            V = vt.block
+            params = self.resolve_params(z.shape[1], z.shape[2], **kw)
+            g = jax.lax.axis_index(axis_name)
+            ids = g * V + jnp.arange(V)
+            arrays = virtual_arrays(vt, z.dtype)
+            sel = _device_slice(arrays, g)
+
+            def round_(carry, _):
+                zc, st = carry
+                xhat, count = st if self._stochastic(**kw) else (st, None)
+                _, xhat2 = self.refresh(zc, xhat, ids, count,
+                                        backend=backend, **params)
+                acc = _virtual_selected_round(
+                    xhat2.reshape(V, -1), vt, axis_name, sel,
+                    z_diag=zc.reshape(V, -1))
+                Z2 = acc.reshape(zc.shape)
+                if gamma != 1.0:
+                    Z2 = zc + gamma * (Z2 - zc)      # CHOCO relaxation
+                st2 = ((xhat2, count + 1) if self._stochastic(**kw)
+                       else xhat2)
+                return (Z2, st2), None
 
             (z_fin, st_fin), _ = jax.lax.scan(round_, (z, state), None,
                                               length=T_con)
@@ -1427,6 +1602,11 @@ class MaskedGossipCombine(GossipCombine):
         raise TypeError(f"combine rule {self.name!r} is availability-"
                         f"masked; use make_mesh_masked_mixer")
 
+    def make_virtual_mesh_mixer(self, axis_name, vt, T_con, *,
+                                backend="xla-ref"):
+        raise TypeError(f"combine rule {self.name!r} is availability-"
+                        f"masked; use make_virtual_mesh_masked_mixer")
+
     def signature(self, T_con: int, **params) -> CommSignature:
         # static pricing cannot see the mask: full-participation worst
         # case (the event-driven clock measures the real cost)
@@ -1524,6 +1704,34 @@ class PartialGossipCombine(MaskedGossipCombine):
                                                backend), None
             out, _ = jax.lax.scan(round_, z, None, length=T_con)
             return out
+        return mix
+
+    def make_virtual_mesh_masked_mixer(self, axis_name: str, vt,
+                                       T_con: int, *,
+                                       backend: str = "xla-ref") -> Callable:
+        """Per-device virtual-tier closure ``(z (V, d, r), m (L,)) ↦
+        z'``: the per-edge masked fold zeroes every edge with a dead
+        endpoint and moves the lost mass onto the receiver's diagonal
+        (the COO form of :func:`masked_mixing_matrix`'s fold), then runs
+        T_con plain segment-sum rounds on the folded slice.  Full mask:
+        every keep is 1, the fold is the identity, and the rounds ARE
+        the dense virtual lowering's rounds bit-for-bit."""
+        if T_con == 0:
+            return lambda z, m: z
+
+        def mix(z, m):
+            g = jax.lax.axis_index(axis_name)
+            arrays = virtual_arrays(vt, z.dtype)
+            mf = m.astype(z.dtype).reshape(vt.n_dev, vt.block)
+            sel_eff = _virtual_masked_fold(
+                vt, _device_slice(arrays, g), g, mf)
+            flat = z.reshape(vt.block, -1)
+
+            def round_(carry, _):
+                return _virtual_selected_round(carry, vt, axis_name,
+                                               sel_eff), None
+            out, _ = jax.lax.scan(round_, flat, None, length=T_con)
+            return out.reshape(z.shape)
         return mix
 
 
@@ -1684,6 +1892,48 @@ class StaleGossipCombine(MaskedGossipCombine):
             return zf, of
         return mix
 
+    def make_virtual_mesh_masked_state_mixer(self, axis_name: str, vt,
+                                             T_con: int, *,
+                                             backend: str = "xla-ref",
+                                             **kw) -> Callable:
+        """Per-device virtual-tier closure ``(z (V, d, r), x̂ (V, d, r),
+        m (L,)) ↦ (z', x̂')`` — the simulator's sparse stale rounds on
+        the device's block slice: live virtual nodes publish into their
+        copies, round 0 mixes the published copies under the UNMASKED
+        edge values (the queued stale packet delivers once), later
+        rounds under the per-edge masked fold; down nodes freeze."""
+        if T_con == 0:
+            return lambda z, state, m: (z, state)
+
+        def mix(z, state, m):
+            V = vt.block
+            g = jax.lax.axis_index(axis_name)
+            arrays = virtual_arrays(vt, z.dtype)
+            sel = _device_slice(arrays, g)
+            mf = m.astype(z.dtype).reshape(vt.n_dev, V)
+            sel_m = _virtual_masked_fold(vt, sel, g, mf)
+            lr, lc, lv, crs, ccs, cvs, dg = sel
+            _, _, lv_m, _, _, cvs_m, dg_m = sel_m
+            mrow = m.astype(bool).reshape(vt.n_dev, V)[g][:, None, None]
+
+            def round_(carry, rd):
+                zc, xhat = carry
+                xhat2 = jnp.where(mrow, zc, xhat)   # live nodes publish
+                sel_rd = (lr, lc, jnp.where(rd == 0, lv, lv_m),
+                          crs, ccs,
+                          [jnp.where(rd == 0, a, b)
+                           for a, b in zip(cvs, cvs_m)],
+                          jnp.where(rd == 0, dg, dg_m))
+                acc = _virtual_selected_round(xhat2.reshape(V, -1), vt,
+                                              axis_name, sel_rd)
+                Z2 = jnp.where(mrow, acc.reshape(zc.shape), zc)
+                return (Z2, xhat2), None
+
+            (zf, xf), _ = jax.lax.scan(round_, (z, state),
+                                       jnp.arange(T_con))
+            return zf, xf
+        return mix
+
 
 class PushSumGossipCombine(MaskedGossipCombine):
     """``push_sum_gossip`` — ratio-consensus for the DIRECTED mixing
@@ -1831,6 +2081,62 @@ class PushSumGossipCombine(MaskedGossipCombine):
             (zf, wv), _ = jax.lax.scan(round_, (z, wv0), None,
                                        length=T_con)
             return zf / jnp.where(wv > 0, wv, 1.0)
+        return mix
+
+    def make_virtual_mesh_masked_mixer(self, axis_name: str, vt,
+                                       T_con: int, *,
+                                       backend: str = "xla-ref") -> Callable:
+        """Per-device virtual-tier push-sum ``(z (V, d, r), m (L,)) ↦
+        z'``: each virtual node's column normalizer is its own RECEIVER-
+        side live mass (row slice = column slice under the symmetry
+        requirement, checked at make time), payloads are pre-scaled
+        (z/c, w/c) and pushed through the MASKED edge values with the
+        ORIGINAL diagonal — arithmetic-identical to the simulator's
+        column-stochastic ``vals_m / c[col]`` rounds because
+        ``vals_C·z[col] = vals_m·(z/c)[col]`` and ``diag_C·z =
+        diag·(z/c)`` — with the companion weight riding the same
+        rounds."""
+        if not _vt_is_symmetric(vt):
+            raise ValueError(
+                "push_sum_gossip's virtual-mesh lowering computes each "
+                "sender's column normalizer from its own receiver-side "
+                "mass, which requires a symmetric mixing matrix")
+        if T_con == 0:
+            return lambda z, m: z
+
+        def mix(z, m):
+            V = vt.block
+            g = jax.lax.axis_index(axis_name)
+            arrays = virtual_arrays(vt, z.dtype)
+            sel = _device_slice(arrays, g)
+            mf = m.astype(z.dtype).reshape(vt.n_dev, V)
+            # masked edges, ORIGINAL diagonal: the self link always
+            # stays live, exactly like push_sum_matrix
+            sel_m = _virtual_masked_fold(vt, sel, g, mf, fold_diag=False)
+            lr, _, lv_m, crs, _, cvs_m, dg = sel_m
+            # own column's live mass, receiver side (symmetric W)
+            c = dg + jax.ops.segment_sum(lv_m, lr, num_segments=V + 1,
+                                         indices_are_sorted=True)[:V]
+            for k in range(len(vt.dev_shifts)):
+                c = c + jax.ops.segment_sum(cvs_m[k], crs[k],
+                                            num_segments=V + 1,
+                                            indices_are_sorted=True)[:V]
+            c = jnp.where(c > 0, c, 1.0)
+            flat = z.reshape(V, -1)
+            w0 = jnp.ones((V, 1), z.dtype)
+
+            def round_(carry, _):
+                zf, wv = carry
+                zs = zf / c[:, None]                 # pre-scaled payload
+                ws = wv / c[:, None]
+                zf2 = _virtual_selected_round(zs, vt, axis_name, sel_m)
+                wv2 = _virtual_selected_round(ws, vt, axis_name, sel_m)
+                return (zf2, wv2), None
+
+            (zf, wv), _ = jax.lax.scan(round_, (flat, w0), None,
+                                       length=T_con)
+            out = zf / jnp.where(wv > 0, wv, 1.0)    # bias correction
+            return out.reshape(z.shape)
         return mix
 
 

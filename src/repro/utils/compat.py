@@ -7,6 +7,12 @@ The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``,
 not exist yet.  Everything here degrades to the old spelling with the same
 semantics (all axes auto / collective-explicit inside shard_map), so the
 rest of the codebase can use one call site.
+
+Each shim is gated on ONE module-level feature probe (evaluated once at
+import).  A shim may be deleted when its probe is True on the minimum
+supported jax: ``_HAS_SHARD_MAP`` is still False on this container's
+0.4.37, so the ``jax.experimental.shard_map`` fallback stays;
+``_HAS_AXIS_TYPE`` likewise.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import functools
 import jax
 
 _HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_SHARD_MAP = hasattr(jax, "shard_map")      # top-level since 0.6
 
 
 def make_mesh(shape, axis_names):
@@ -32,14 +39,15 @@ def shard_map(f=None, *, mesh, in_specs, out_specs, axis_names=None,
 
     ``axis_names`` is accepted for parity with the new API and dropped on
     0.4.x, where every mesh axis is implicitly named inside the body.
-    ``check_rep=False`` disables the replication checker, which has no
-    rule for ``pallas_call`` — required whenever the body dispatches a
-    Pallas kernel (the engine-routed mesh runtime)."""
+    ``check_rep=False`` disables the replication checker (``check_vma``
+    in the new spelling), which has no rule for ``pallas_call`` —
+    required whenever the body dispatches a Pallas kernel (the
+    engine-routed substrate skeletons in ``repro.core.runtime``)."""
     if f is None:
         return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                                  out_specs=out_specs, axis_names=axis_names,
                                  check_rep=check_rep)
-    if hasattr(jax, "shard_map"):
+    if _HAS_SHARD_MAP:
         kw = {} if axis_names is None else {"axis_names": axis_names}
         if not check_rep:
             kw["check_vma"] = False

@@ -213,16 +213,26 @@ def test_mesh_substrate_validation():
         run_experiment(_with_solver(mesh_spec, "sim_only_solver"), key=0)
     # weights are no longer restricted to circulant — with the right
     # device count a metropolis ER spec dispatches (subprocess tests
-    # assert the parity).  When L != device_count, solvers WITH a
-    # virtual-node runtime (PR 8) still dispatch as long as the node
-    # count divides evenly over devices; solvers without one fail
-    # loudly on the node/device check.
+    # assert the parity).  When L != device_count, every program-derived
+    # solver dispatches on the virtual-node tier as long as the node
+    # count divides evenly over devices (since PR 9 that is ALL
+    # registered solvers); only a hand-registered def without a virtual
+    # runtime fails loudly on the node/device check.
+    if "mesh_only_solver" not in SOLVERS:
+        register_solver(SolverDef(name="mesh_only_solver",
+                                  fn=dif_altgdmin,
+                                  mesh_fn=SOLVERS["dif_altgdmin"].mesh_fn,
+                                  topology="W"))
     if jax.device_count() != TINY.problem.L:
         with pytest.raises(ValueError, match="device"):
-            run_experiment(_with_solver(mesh_spec, "dgd_altgdmin"), key=0)
+            run_experiment(_with_solver(mesh_spec, "mesh_only_solver"),
+                           key=0)
         if TINY.problem.L % jax.device_count() == 0:
             trace = run_experiment(mesh_spec, key=0)   # virtual tier
             assert trace.U_nodes.shape[0] == TINY.problem.L
+            dgd = run_experiment(_with_solver(mesh_spec, "dgd_altgdmin"),
+                                 key=0)                # newly virtual-capable
+            assert dgd.U_nodes.shape[0] == TINY.problem.L
 
 
 # --------------------------------------------------------- wall clock

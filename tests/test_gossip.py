@@ -161,6 +161,53 @@ def test_invalid_strategy_raises():
         AggregationConfig(strategy="telepathy")
 
 
+# ----------------- compressed strategies (PR-9 satellite bugfix)
+
+def test_compressed_strategies_priced_from_rule_signature():
+    """Regression: comm_bytes_per_step used to call the rule signature
+    without payload context, so every strategy priced the dense
+    n_params × itemsize product (a ``wire_dtype`` scalar at best).  The
+    compressed strategies must price their actual wire format — well
+    under the dense diffusion volume."""
+    n, itemsize, L = 4096, 4, 16
+    dense = comm_bytes_per_step(n, itemsize,
+                                AggregationConfig("diffusion", t_con=1), L)
+    topk = comm_bytes_per_step(
+        n, itemsize, AggregationConfig("topk", t_con=1,
+                                       compression_k=256), L)
+    assert dense >= 4 * topk, (dense, topk)
+    # k values (4 B) + k indices (4 B) per message, deg 2, one round
+    assert topk == 2 * (256 * 2) * 4
+    bf16 = comm_bytes_per_step(n, itemsize,
+                               AggregationConfig("quantized", t_con=1), L)
+    int8 = comm_bytes_per_step(
+        n, itemsize, AggregationConfig("quantized", t_con=1,
+                                       compression="int8"), L)
+    assert bf16 == dense // 2
+    assert int8 == 2 * (n + 4)       # int8 payload + one f32 scale, deg 2
+
+
+def test_compressed_strategies_exchange_params():
+    """topk / quantized are parameter-gossip strategies: grads untouched,
+    params mixed.  topk's memoryless compressor zeroes all but the k
+    largest-magnitude entries of the sent copy; quantized defaults to a
+    bfloat16 wire cast (output restored to the param dtype)."""
+    for agg in (AggregationConfig("topk", compression_k=4),
+                AggregationConfig("quantized")):
+        g = _node_tree()
+        assert aggregate_gradients(g, agg) is g
+        p = _node_tree()
+        out = aggregate_params(p, agg)
+        assert not np.allclose(np.asarray(out["backbone"]),
+                               np.asarray(p["backbone"]))
+        assert out["backbone"].dtype == p["backbone"].dtype
+    # knobs are rejected on strategies that don't consume them
+    with pytest.raises(ValueError, match="compression_k"):
+        AggregationConfig("diffusion", compression_k=4)
+    with pytest.raises(ValueError, match="compression "):
+        AggregationConfig("topk", compression="int8")
+
+
 # ------------------------- weighted roll_gossip (PR-5 satellite bugfix)
 
 def test_roll_gossip_weighted_matrix_matches_agree():

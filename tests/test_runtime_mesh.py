@@ -23,7 +23,7 @@ SCRIPT = textwrap.dedent("""
     from repro.core import (generate_problem, node_view,
                             decentralized_spectral_init, dif_altgdmin,
                             subspace_distance)
-    from repro.core.runtime import dif_altgdmin_mesh
+    from repro.core import dif_altgdmin_mesh
     from repro.core.altgdmin import resolve_eta
     from repro.distributed import circulant_weights
 
@@ -206,7 +206,7 @@ FUSED_COMBINE_SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp, numpy as np
     from repro.core import generate_problem, node_view, \\
         decentralized_spectral_init
-    from repro.core.runtime import dif_altgdmin_mesh
+    from repro.core import dif_altgdmin_mesh
     from repro.distributed import circulant_weights
     from repro.utils.compat import make_mesh
     from repro.kernels import ops
@@ -337,7 +337,7 @@ WEIGHTED_COMBINE_SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp, numpy as np
     from repro.core import generate_problem, node_view, \\
         decentralized_spectral_init
-    from repro.core.runtime import dif_altgdmin_mesh
+    from repro.core import dif_altgdmin_mesh
     from repro.distributed import erdos_renyi, metropolis_weights
     from repro.utils.compat import make_mesh
     from repro.kernels import ops
@@ -466,7 +466,7 @@ COMPRESSED_COMBINE_SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp, numpy as np
     from repro.core import generate_problem, node_view, \\
         decentralized_spectral_init
-    from repro.core.runtime import dif_topk_mesh
+    from repro.core import dif_topk_mesh
     from repro.distributed import circulant_weights
     from repro.utils.compat import make_mesh
     from repro.kernels import ops

@@ -239,6 +239,42 @@ def test_maybe_sparsify_policy():
     assert consensus.maybe_sparsify(sw) is sw     # explicit passes through
 
 
+def test_spectral_init_sparse_equals_dense():
+    """PR-9 satellite: decentralized_spectral_init routes every AGREE
+    through maybe_sparsify, so at L ≥ 512 on a sparse graph the init's
+    consensus rounds run on the padded-COO segment-sum path.  Pinned
+    against the dense (L, L) product ≤ 1e-12 — same arithmetic per
+    round, different lowering."""
+    from repro.core import spectral
+    from repro.core.problem import generate_problem, node_view
+
+    L = 1024
+    g = graphs.erdos_renyi(L, p=6.0 / L, seed=5)
+    W = mixing.metropolis_weights_sparse(g).to_dense()
+    assert isinstance(consensus.maybe_sparsify(W), SparseWeights)
+
+    prob = generate_problem(jax.random.PRNGKey(0), d=8, T=L, r=2, n=10,
+                            L=L, kappa=1.2)
+    Xg, yg = node_view(prob)
+    kw = dict(kappa=prob.kappa, mu=prob.mu, r=2, T_pm=3, T_con=2)
+    sp = spectral.decentralized_spectral_init(
+        jax.random.PRNGKey(1), Xg, yg, W, **kw)
+
+    orig = spectral.maybe_sparsify
+    spectral.maybe_sparsify = lambda w: w         # force the dense path
+    try:
+        dn = spectral.decentralized_spectral_init(
+            jax.random.PRNGKey(1), Xg, yg, W, **kw)
+    finally:
+        spectral.maybe_sparsify = orig
+
+    for a, b, what in ((sp.U0, dn.U0, "U0"),
+                       (sp.R_diag, dn.R_diag, "R_diag"),
+                       (sp.alpha, dn.alpha, "alpha")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=1e-12, err_msg=what)
+
+
 def test_power_hoist_matches_per_round():
     sw, Wd, Z = _parity_setup()
     r = consensus.get_rule("gossip")

@@ -211,7 +211,7 @@ def test_masked_trajectory_deterministic_across_substrates():
     the SPMD mesh runtime see the identical mask and agree on the
     trajectory to float tolerance."""
     from repro.core.altgdmin import dif_partial_altgdmin
-    from repro.core.runtime import dif_partial_mesh
+    from repro.core import dif_partial_mesh
     n_dev = jax.device_count()
     if n_dev < 2:
         pytest.skip("needs >= 2 devices (run under "
