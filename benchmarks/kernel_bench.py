@@ -273,7 +273,7 @@ def bench_compression(quick: bool = False, t_con: int = 3):
         sig = rule.signature(t_con, d=d, r=r, **kw)
         bytes_iter = sig.bytes_per_iter(d * r, 8, L, K)
 
-        def timed_round(backend):
+        def timed_round(backend, rule=rule, rule_name=rule_name, kw=kw):
             if rule_name == "gossip":
                 mixer = rule.make_sim_mixer(W, t_con, backend=backend)
                 fn = jax.jit(mixer)

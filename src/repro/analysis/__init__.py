@@ -1,0 +1,27 @@
+"""reprolint — the repo's static-analysis suite (``repro.analysis``).
+
+Two levels, one driver:
+
+  * jaxpr analyzers (:mod:`repro.analysis.jaxlint`) trace every
+    registered :class:`~repro.core.program.SolverProgram` through its
+    three lowerings at a tiny shape and enforce the dispatch budget
+    (JX001), the no-dense-node-axis invariant (JX002), f64 precision
+    flow (JX003), and CommSignature wire pricing (JX004);
+  * AST rules (:mod:`repro.analysis.astlint`) enforce the source-level
+    hygiene rules RL001–RL006.
+
+Run everything: ``python -m tools.reprolint --all`` (the CLI sets up
+the 8 fake host devices the mesh traces need).  Programmatic use::
+
+    from repro.analysis import run_all
+    findings = run_all(repo_root=".")
+"""
+from repro.analysis.astlint import check_source, run_ast_rules
+from repro.analysis.driver import main, run_all
+from repro.analysis.findings import (Finding, load_baseline,
+                                     split_by_baseline, write_baseline)
+from repro.analysis.jaxlint import analyze_program
+
+__all__ = ["Finding", "analyze_program", "check_source", "load_baseline",
+           "main", "run_all", "run_ast_rules", "split_by_baseline",
+           "write_baseline"]

@@ -1,0 +1,100 @@
+"""The reprolint driver — both analyzer levels, the baseline, the CLI.
+
+Exit codes: 0 clean (or every finding baselined), 1 findings, 2 usage.
+The CLI front-end is ``tools/reprolint`` (``python -m tools.reprolint``),
+which prepares the 8 fake host devices before jax loads; this module
+assumes that environment already exists when the jaxpr level runs.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.analysis.findings import (Finding, load_baseline,
+                                     split_by_baseline, write_baseline)
+
+DEFAULT_BASELINE = "tools/reprolint/baseline.json"
+
+
+def run_all(repo_root=".", *, ast_level=True, jaxpr_level=True,
+            programs=None, substrates=None) -> list[Finding]:
+    """Every finding on the tree (pre-baseline)."""
+    from repro.analysis import astlint, jaxlint
+    from repro.analysis.harness import SUBSTRATES
+
+    findings: list[Finding] = []
+    if ast_level:
+        findings += astlint.run_ast_rules(repo_root)
+    if jaxpr_level:
+        from repro.core.program import program_names
+        for name in programs or program_names():
+            findings += jaxlint.analyze_program(
+                name, substrates or SUBSTRATES)
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="jaxpr + AST static analysis for the repro codebase "
+                    "(see README 'Static analysis' for the rule table)")
+    level = ap.add_mutually_exclusive_group()
+    level.add_argument("--all", action="store_true",
+                       help="both analyzer levels (the CI entry point)")
+    level.add_argument("--ast", action="store_true",
+                       help="AST rules RL001–RL006 only (fast, no jax "
+                            "tracing)")
+    level.add_argument("--jaxpr", action="store_true",
+                       help="jaxpr rules JX001–JX004 only")
+    ap.add_argument("--program", action="append", default=None,
+                    metavar="NAME",
+                    help="restrict the jaxpr level to this program "
+                         "(repeatable; default: all registered)")
+    ap.add_argument("--substrate", action="append", default=None,
+                    choices=("simulator", "mesh", "virtual"),
+                    help="restrict the jaxpr level to this substrate "
+                         "(repeatable; default: all three)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"suppression file (default {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline as "
+                         "TODO-justified suppressions and exit")
+    args = ap.parse_args(argv)
+    if not (args.all or args.ast or args.jaxpr):
+        ap.error("pick a level: --all, --ast, or --jaxpr")
+
+    root = pathlib.Path.cwd()
+    if not (root / "src" / "repro").is_dir():
+        print("reprolint: run from the repo root (src/repro not found)",
+              file=sys.stderr)
+        return 2
+
+    findings = run_all(
+        root, ast_level=args.all or args.ast,
+        jaxpr_level=args.all or args.jaxpr,
+        programs=args.program, substrates=args.substrate)
+
+    if args.write_baseline:
+        write_baseline(root / args.baseline, findings)
+        print(f"wrote {len(findings)} suppression skeleton(s) to "
+              f"{args.baseline}; fill in every justification")
+        return 0
+
+    baseline = load_baseline(root / args.baseline)
+    new, suppressed, stale = split_by_baseline(findings, baseline)
+
+    for f in sorted(new, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.render())
+    if suppressed:
+        print(f"({len(suppressed)} finding(s) suppressed by "
+              f"{args.baseline})")
+    for fp in stale:
+        print(f"stale baseline entry (fix landed — remove it): {fp}")
+
+    if new or stale:
+        print(f"reprolint: {len(new)} finding(s), {len(stale)} stale "
+              f"baseline entr(ies)")
+        return 1
+    print("reprolint: clean")
+    return 0

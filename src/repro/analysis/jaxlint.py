@@ -1,0 +1,226 @@
+"""Level-1 analyzers: invariants of the traced lowerings.
+
+Four rules, each a checked property of ``jax.make_jaxpr`` output — no
+solver ever executes:
+
+  * **JX001 dispatch budget** — the fused backends promise "one kernel
+    per phase": the number of ``pallas_call`` eqns per outer iteration
+    must equal the program's registered
+    :class:`~repro.core.program.DispatchBudget` exactly (and exactly
+    one dispatch — the final B refit — may live outside the outer
+    scan).  This replaces the runtime call-count mocks.
+  * **JX002 no dense node axis** — no eqn may CREATE a buffer carrying
+    two dims equal to the node count L (the 40 GB ``consensus_spread``
+    bug class).  Pass-throughs of an existing (L, L) operand — the
+    small-L dense mixing tier below ``SPARSE_MIN_NODES`` — are fine;
+    the rule fires only where the quadratic buffer is born, and those
+    birth sites must be on the explicit allowlist below, each with a
+    one-line justification naming its size guard.
+  * **JX003 precision flow** — traced at f64, no eqn may narrow an f64
+    aval to f32/bf16/f16 outside ``src/repro/kernels/`` (the sanctioned
+    f32-accumulator kernels).  This makes the ``_fused_wanted``
+    f64-stays-exact gate statically verifiable.
+  * **JX004 comm pricing** — the ppermute structure of every mesh /
+    virtual-mesh lowering must match its ``CommSignature``: eqn-counted
+    ppermutes per outer iteration == rounds_per_iter × shift classes ×
+    the rule's registered wire factor.  A lowering that gossips more
+    (or less) than its signature prices is lying to the system clock —
+    the PR-9 topk/quantized aggregation bug class.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.analysis.harness import (SUBSTRATES, Trace, count_primitive,
+                                    eqn_location, iter_eqns, trace_program)
+
+# JX002 allowlist: (repo-relative path, function) -> why the (L, L)
+# buffer is acceptable.  Every entry must name the size guard that caps
+# it below the sparse tier.
+DENSE_NODE_AXIS_ALLOWLIST = {
+    ("src/repro/core/metrics.py", "consensus_spread"):
+        "exact pairwise diameter; consensus_spread switches to the "
+        "O(L·d·r) radius above SPREAD_EXACT_MAX=4096 nodes",
+    ("src/repro/distributed/consensus.py", "masked_mixing_matrix"):
+        "per-iteration masked dense W; dense tier only — sparse "
+        "topologies take the _sparse_masked_fold edge path above "
+        "SPARSE_MIN_NODES=512",
+    ("src/repro/distributed/consensus.py", "push_sum_matrix"):
+        "per-iteration column-stochastic dense W; dense tier only, "
+        "same SPARSE_MIN_NODES=512 gate as masked_mixing_matrix",
+}
+
+# JX003: directories whose f64→f32 narrowings are sanctioned (the
+# mixed-precision accumulator kernels).
+SANCTIONED_NARROWING_DIRS = ("src/repro/kernels/",)
+
+_NARROW = {jnp.dtype(t) for t in ("float32", "bfloat16", "float16")}
+
+
+def _sym(trace: Trace) -> str:
+    return f"{trace.program.name}/{trace.substrate}"
+
+
+def _lowering_path(trace: Trace) -> str:
+    return "src/repro/core/program.py"
+
+
+# ----------------------------------------------------------------------
+# JX001 — dispatch budget
+# ----------------------------------------------------------------------
+
+def check_dispatch_budget(trace: Trace) -> list[Finding]:
+    budget = trace.program.dispatch_budget
+    if budget is None:
+        return [Finding(
+            rule="JX001", path=_lowering_path(trace), line=0,
+            symbol=_sym(trace), detail="missing-budget",
+            message=f"program {trace.program.name!r} registered without "
+                    f"a DispatchBudget — every program must declare its "
+                    f"per-iteration pallas_call count")]
+    expected = budget.per_iter(trace.substrate, trace.rounds,
+                               trace.n_shifts, trace.local_steps)
+    got, outside = count_primitive(trace, "pallas_call")
+    out = []
+    if got != expected:
+        out.append(Finding(
+            rule="JX001", path=_lowering_path(trace), line=0,
+            symbol=_sym(trace), detail="per-iter",
+            message=f"{got} pallas_call eqns per outer iteration, budget "
+                    f"says {expected} (R={trace.rounds}, "
+                    f"K={trace.n_shifts}, local_steps={trace.local_steps})"))
+    if outside != 1:
+        out.append(Finding(
+            rule="JX001", path=_lowering_path(trace), line=0,
+            symbol=_sym(trace), detail="outside-scan",
+            message=f"{outside} pallas_call eqns outside the outer scan; "
+                    f"exactly 1 (the final B refit) is budgeted"))
+    return out
+
+
+# ----------------------------------------------------------------------
+# JX002 — no dense node axis
+# ----------------------------------------------------------------------
+
+def _ndims_equal(aval, L: int) -> int:
+    shape = getattr(aval, "shape", ())
+    return sum(1 for dim in shape if dim == L)
+
+
+def check_dense_node_axis(trace: Trace) -> list[Finding]:
+    L = trace.L
+    out = []
+    seen = set()
+    for eqn, _, _ in iter_eqns(trace.jaxpr):
+        creates = any(_ndims_equal(v.aval, L) >= 2 for v in eqn.outvars)
+        if not creates:
+            continue
+        inherits = any(_ndims_equal(v.aval, L) >= 2 for v in eqn.invars
+                       if hasattr(v, "aval"))
+        if inherits:
+            continue            # pass-through of an existing (L, L) operand
+        path, func, line = eqn_location(eqn)
+        key = (path, func)
+        if key in DENSE_NODE_AXIS_ALLOWLIST or key in seen:
+            continue
+        seen.add(key)
+        shape = next(tuple(v.aval.shape) for v in eqn.outvars
+                     if _ndims_equal(v.aval, L) >= 2)
+        out.append(Finding(
+            rule="JX002", path=path or _lowering_path(trace), line=line,
+            symbol=_sym(trace), detail=f"{func}:{eqn.primitive.name}",
+            message=f"eqn {eqn.primitive.name!r} in {func}() creates a "
+                    f"dense node-axis buffer {shape} (two dims == L={L}) "
+                    f"— O(L²) memory; use the sparse path or allowlist "
+                    f"with its size guard"))
+    return out
+
+
+# ----------------------------------------------------------------------
+# JX003 — precision flow (run on the f64 trace)
+# ----------------------------------------------------------------------
+
+def check_precision_flow(trace: Trace) -> list[Finding]:
+    out = []
+    seen = set()
+    for eqn, _, _ in iter_eqns(trace.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = [v for v in eqn.invars
+               if getattr(getattr(v, "aval", None), "dtype", None)
+               == jnp.dtype("float64")]
+        if not src:
+            continue
+        dst = eqn.params.get("new_dtype")
+        if dst is None or jnp.dtype(dst) not in _NARROW:
+            continue
+        path, func, line = eqn_location(eqn)
+        if any(path.startswith(d) for d in SANCTIONED_NARROWING_DIRS):
+            continue
+        key = (path, func, str(dst))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(Finding(
+            rule="JX003", path=path or _lowering_path(trace), line=line,
+            symbol=_sym(trace), detail=f"{func}:{jnp.dtype(dst).name}",
+            message=f"f64 value narrowed to {jnp.dtype(dst).name} in "
+                    f"{func}() — outside the sanctioned kernels/ "
+                    f"accumulators, f64 runs must stay exact "
+                    f"(the _fused_wanted gate)"))
+    return out
+
+
+# ----------------------------------------------------------------------
+# JX004 — comm-pricing completeness
+# ----------------------------------------------------------------------
+
+def check_comm_pricing(trace: Trace) -> list[Finding]:
+    if trace.substrate == "simulator":
+        # the simulator's wire is the hoisted W^{T_con} combine — rounds
+        # legitimately collapse into one matmul, so eqn counting is
+        # meaningless there; pricing is checked on the wire substrates
+        return []
+    budget = trace.program.dispatch_budget
+    if budget is None:
+        return []                # JX001 already reports the missing budget
+    wire = (budget.wire_mesh if trace.substrate == "mesh"
+            else budget.wire_virtual)
+    expected = trace.rounds * trace.n_shifts * wire
+    got, outside = count_primitive(trace, "ppermute")
+    out = []
+    if got != expected:
+        out.append(Finding(
+            rule="JX004", path=_lowering_path(trace), line=0,
+            symbol=_sym(trace), detail="rounds",
+            message=f"{got} ppermute eqns per outer iteration, but the "
+                    f"CommSignature prices {expected} "
+                    f"(rounds={trace.rounds} × shifts={trace.n_shifts} × "
+                    f"wire={wire}) — the lowering's gossip structure and "
+                    f"its wire pricing disagree"))
+    if outside != 0:
+        out.append(Finding(
+            rule="JX004", path=_lowering_path(trace), line=0,
+            symbol=_sym(trace), detail="outside-scan",
+            message=f"{outside} ppermute eqns outside the outer scan — "
+                    f"unpriced communication"))
+    return out
+
+
+# ----------------------------------------------------------------------
+# driver entry
+# ----------------------------------------------------------------------
+
+def analyze_program(name: str, substrates=SUBSTRATES) -> list[Finding]:
+    """All four jaxpr rules for one program: f32 traces price the
+    dispatch/dense/comm structure, an f64 trace checks precision flow."""
+    findings = []
+    for substrate in substrates:
+        t32 = trace_program(name, substrate, jnp.float32)
+        findings += check_dispatch_budget(t32)
+        findings += check_dense_node_axis(t32)
+        findings += check_comm_pricing(t32)
+        t64 = trace_program(name, substrate, jnp.float64)
+        findings += check_precision_flow(t64)
+    return findings

@@ -67,6 +67,13 @@ class SolverDef:
         return self.mesh_fn is not None
 
     @property
+    def dispatch_budget(self):
+        """The program's statically-enforced per-iteration kernel
+        budget (:class:`~repro.core.program.DispatchBudget`; rule JX001
+        of ``tools/reprolint``), or None for hand-built defs."""
+        return self.program.dispatch_budget if self.program else None
+
+    @property
     def comm(self) -> str:
         """Legacy alias: the combine rule's pricing pattern."""
         return self.signature(1).pattern
@@ -115,6 +122,11 @@ def register_program_solver(name: str) -> SolverDef:
     entry points come from the program's lowerings, and the call
     convention metadata from its fields."""
     p = get_program(name)
+    if p.dispatch_budget is None:
+        raise ValueError(
+            f"program {p.name!r} has no dispatch_budget; every "
+            f"registry-derived solver must declare its per-iteration "
+            f"kernel budget (statically enforced by tools/reprolint)")
     return register_solver(SolverDef(
         name=p.name, fn=lower_simulator(p),
         topology=p.topology, combine=p.combine,

@@ -111,6 +111,43 @@ MIXERS = ("plain", "neighbor", "central", "state", "masked",
           "masked_state")
 
 
+class DispatchBudget(NamedTuple):
+    """Statically-enforced kernel-dispatch pricing of a program's
+    lowerings (checked by ``python -m tools.reprolint``, rule JX001).
+
+    Each substrate entry is coefficients ``(a, b, c, d)`` of the
+    per-outer-iteration ``pallas_call`` count on fused backends::
+
+        count = a + R·(b + c·K) + d·local_steps
+
+    where R is the combine rule's ``CommSignature.rounds_per_iter`` and
+    K the number of cyclic shift classes of the decomposed mixing
+    matrix (0 on the simulator — its AGREE chain is the hoisted
+    W^{T_con} combine).  ``a`` counts the round-independent dispatches
+    (the fused min-B+gradient; the hoisted combine), ``b``/``c`` the
+    per-round and per-round-per-shift ones (stateful encode/decode),
+    ``d`` the local adapt epoch.  One extra dispatch — the final B
+    refit — always sits outside the outer scan and is budgeted
+    separately by the analyzer.
+
+    ``wire_mesh`` / ``wire_virtual`` price the gossip structure (rule
+    JX004): ppermutes per outer iteration must equal R·K·wire — wire is
+    1 for value-shipping rules, 2 where a payload rides with each
+    message (top-k indices, quantization scales, push-sum weights), 0
+    for the fusion-center psum."""
+    simulator: tuple
+    mesh: tuple
+    virtual: tuple
+    wire_mesh: int = 1
+    wire_virtual: int = 1
+
+    def per_iter(self, substrate: str, rounds: int, n_shifts: int,
+                 local_steps: int) -> int:
+        a, b, c, d = getattr(self, "virtual" if substrate == "virtual"
+                             else substrate)
+        return a + rounds * (b + c * n_shifts) + d * local_steps
+
+
 @dataclasses.dataclass(frozen=True)
 class SolverProgram:
     """One AltGDmin-family solver as data.
@@ -142,6 +179,7 @@ class SolverProgram:
     rule_kwargs: tuple = ()
     defaults: tuple = ()             # ((name, value), ...)
     refit: Callable = _refit_last_min
+    dispatch_budget: Optional[DispatchBudget] = None
 
     def __post_init__(self):
         if self.mixer not in MIXERS:
@@ -590,59 +628,95 @@ def program_names() -> tuple[str, ...]:
     return tuple(sorted(PROGRAMS))
 
 
-register_program(SolverProgram(
-    name="dif_altgdmin", combine="gossip", update=_upd_dif))
+# Budget shorthand: the adapt-then-combine family shares one shape —
+# simulator fuses min-grad + the hoisted W^{T_con} combine (2 dispatches,
+# round-independent); mesh keeps the combine per round (1 + R); the
+# virtual tier's combine is segment-sum/ppermute only (1).
+_BUDGET_DIFFUSION = DispatchBudget(
+    simulator=(2, 0, 0, 0), mesh=(1, 1, 0, 0), virtual=(1, 0, 0, 0))
+
+# Masked / event rules: one masked-combine dispatch per round on both
+# stacked tiers, none on the virtual tier.
+_BUDGET_MASKED = DispatchBudget(
+    simulator=(1, 1, 0, 0), mesh=(1, 1, 0, 0), virtual=(1, 0, 0, 0))
 
 register_program(SolverProgram(
-    name="dec_altgdmin", combine="gossip", update=_upd_dec))
+    name="dif_altgdmin", combine="gossip", update=_upd_dif,
+    dispatch_budget=_BUDGET_DIFFUSION))
+
+register_program(SolverProgram(
+    name="dec_altgdmin", combine="gossip", update=_upd_dec,
+    dispatch_budget=_BUDGET_DIFFUSION))
 
 register_program(SolverProgram(
     name="centralized_altgdmin", combine="central", update=_upd_central,
     mixer="central", stacked=False, topology="none", decentralized=False,
-    refit=_refit_first))
+    refit=_refit_first,
+    dispatch_budget=DispatchBudget(
+        simulator=(1, 0, 0, 0), mesh=(1, 0, 0, 0), virtual=(1, 0, 0, 0),
+        wire_mesh=0, wire_virtual=0)))   # fusion center: psum, no gossip
 
 register_program(SolverProgram(
     name="dgd_altgdmin", combine="neighbor", update=_upd_dgd,
-    mixer="neighbor", topology="adj"))
+    mixer="neighbor", topology="adj",
+    dispatch_budget=DispatchBudget(      # single self-excluding round
+        simulator=(1, 1, 0, 0), mesh=(1, 1, 0, 0), virtual=(1, 0, 0, 0))))
 
 register_program(SolverProgram(
     name="exact_diffusion", combine="exact_diffusion",
-    update=_upd_exact_diffusion, aux="iterate"))
+    update=_upd_exact_diffusion, aux="iterate",
+    dispatch_budget=_BUDGET_DIFFUSION))
 
 register_program(SolverProgram(
     name="beyond_central", combine="beyond_central",
     update=_upd_beyond_central, spec_kwargs=("local_steps",),
-    defaults=(("local_steps", 1),), refit=_refit_last_local))
+    defaults=(("local_steps", 1),), refit=_refit_last_local,
+    dispatch_budget=DispatchBudget(      # one min-grad per LOCAL step,
+        simulator=(0, 1, 0, 1),          # one combine round per iter
+        mesh=(0, 1, 0, 1), virtual=(0, 0, 0, 1))))
 
 register_program(SolverProgram(
     name="dif_topk", combine="topk_gossip", update=_upd_compressed,
     mixer="state", aux="state",
     spec_kwargs=("compression_k", "consensus_gamma"),
     rule_kwargs=("compression_k", "consensus_gamma"),
-    defaults=(("compression_k", 0), ("consensus_gamma", 1.0))))
+    defaults=(("compression_k", 0), ("consensus_gamma", 1.0)),
+    dispatch_budget=DispatchBudget(      # encode + combine per round;
+        simulator=(1, 2, 0, 0),          # indices ride the wire (w=2)
+        mesh=(1, 2, 0, 0), virtual=(1, 1, 0, 0), wire_mesh=2)))
 
 register_program(SolverProgram(
     name="dif_quantized", combine="quantized_gossip",
     update=_upd_compressed, mixer="state", aux="state",
     spec_kwargs=("compression", "consensus_gamma"),
     rule_kwargs=("compression", "consensus_gamma"),
-    defaults=(("compression", None), ("consensus_gamma", 1.0))))
+    defaults=(("compression", None), ("consensus_gamma", 1.0)),
+    dispatch_budget=DispatchBudget(      # per-shift dequant on mesh;
+        simulator=(1, 2, 0, 0),          # scales ride the wire (w=2)
+        mesh=(1, 2, 1, 0), virtual=(1, 1, 0, 0), wire_mesh=2)))
 
 register_program(SolverProgram(
     name="dif_event", combine="event_gossip", update=_upd_compressed,
     mixer="state", aux="state", records_send_frac=True,
     spec_kwargs=("event_threshold", "consensus_gamma"),
     rule_kwargs=("event_threshold", "consensus_gamma"),
-    defaults=(("event_threshold", 0.0), ("consensus_gamma", 1.0))))
+    defaults=(("event_threshold", 0.0), ("consensus_gamma", 1.0)),
+    dispatch_budget=_BUDGET_MASKED))
 
 register_program(SolverProgram(
     name="dif_partial", combine="partial_gossip", update=_upd_masked,
-    mixer="masked", takes_avail=True))
+    mixer="masked", takes_avail=True,
+    dispatch_budget=_BUDGET_MASKED))
 
 register_program(SolverProgram(
     name="dif_stale", combine="stale_gossip", update=_upd_masked_state,
-    mixer="masked_state", aux="state", takes_avail=True))
+    mixer="masked_state", aux="state", takes_avail=True,
+    dispatch_budget=_BUDGET_MASKED))
 
 register_program(SolverProgram(
     name="dif_pushsum", combine="push_sum_gossip", update=_upd_masked,
-    mixer="masked", takes_avail=True))
+    mixer="masked", takes_avail=True,
+    dispatch_budget=DispatchBudget(      # ratio consensus: weight row
+        simulator=(1, 2, 0, 0),          # rides with every message
+        mesh=(1, 1, 0, 0), virtual=(1, 0, 0, 0),
+        wire_mesh=2, wire_virtual=2)))

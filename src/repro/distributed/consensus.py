@@ -319,7 +319,7 @@ def neighbor_average_matrix(adj):
     if isinstance(adj, SparseGraph):
         return neighbor_average_weights_sparse(adj)
     if isinstance(adj, Graph):
-        adj = jnp.asarray(adj.adj, jnp.float64)
+        adj = jnp.asarray(adj.adj, jnp.float64)  # reprolint: allow=RL002 — dense-Graph input tier; SparseGraph returns sparse above
     deg = jnp.maximum(jnp.sum(adj, axis=1), 1.0)
     return adj / deg[:, None]
 
@@ -343,7 +343,7 @@ def mesh_weights_from_matrix(W) -> tuple[tuple[int, ...], np.ndarray]:
     """
     from repro.distributed.mixing import SparseWeights
     if isinstance(W, SparseWeights):
-        W = W.to_dense()
+        W = W.to_dense()  # reprolint: allow=RL002 — per-device mesh tier is small-L by construction; large-L uses VirtualTopology
     try:
         Wn = np.asarray(W)
     except Exception as e:                       # jax TracerConversionError
@@ -400,7 +400,7 @@ def mesh_weights_relabeled(W, *, verify: bool = True
     from repro.distributed.graphs import SparseGraph, reverse_cuthill_mckee
     from repro.distributed.mixing import SparseWeights
     if isinstance(W, SparseWeights):
-        W = W.to_dense()
+        W = W.to_dense()  # reprolint: allow=RL002 — per-device mesh tier is small-L by construction; large-L uses VirtualTopology
     Wn = np.asarray(W)
     L = Wn.shape[0]
     shifts0, table0 = mesh_weights_from_matrix(Wn)
@@ -819,7 +819,11 @@ class GossipCombine(CombineRule):
             return lambda Z: Z
         if isinstance(W, SparseWeights):
             return self._make_sparse_sim_mixer(W, T_con, backend)
-        if backend == "xla-ref":
+        if backend == "xla-ref" or W.dtype == jnp.float64:
+            # sequential exact product: the unfused reference backend,
+            # and x64 operands on any backend (deciding on W's dtype at
+            # build time also keeps the dead f32 W^{T_con} hoist out of
+            # x64 traces — reprolint rule JX003)
             return lambda Z: stacked_product(Z, W, T_con)
         Wp = jnp.linalg.matrix_power(W.astype(jnp.float32), T_con)
 
@@ -1431,9 +1435,11 @@ class QuantizedGossipCombine(CompressedGossipCombine):
             if wire == "int8_stochastic":
                 key = jax.random.fold_in(jax.random.PRNGKey(0), count)
                 keys = jax.vmap(jax.random.fold_in, (None, 0))(key, node_ids)
+                # dither in the operand precision: drawing at f32 and
+                # upcasting would narrow x64 runs (reprolint JX003)
                 u = jax.vmap(lambda kk: jax.random.uniform(
-                    kk, Z.shape[1:], jnp.float32))(keys)
-                qf = jnp.floor(delta / scale + u.astype(Z.dtype))
+                    kk, Z.shape[1:], Z.dtype))(keys)
+                qf = jnp.floor(delta / scale + u)
             else:
                 qf = jnp.rint(delta / scale)
             q = jnp.clip(qf, -127, 127).astype(jnp.int8)

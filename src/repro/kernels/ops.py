@@ -19,11 +19,11 @@ from __future__ import annotations
 
 import contextlib
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.utils import env as env_registry
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import altgdmin_ls as _ls
@@ -58,18 +58,15 @@ def default_backend(*, extra_env: str | None = None,
     this chain with ``extra_env="REPRO_ENGINE_BACKEND"`` and an
     ``xla-ref`` fallback (seed-numerics default off-TPU).
 
-    Env values are validated here, at resolve time, so a typo fails
-    with a message naming the offending variable instead of surfacing
-    obscurely deep in op dispatch."""
+    Env reads go through the :mod:`repro.utils.env` registry, which
+    validates at resolve time: a bad value fails with a message naming
+    the offending variable, and an undeclared variable name fails at
+    the registry instead of silently reading nothing."""
     if _default_backend is not None:
         return _default_backend
     for var in (extra_env, "REPRO_KERNEL_BACKEND"):
-        env = os.environ.get(var) if var else None
+        env = env_registry.read_choice(var, BACKENDS) if var else None
         if env:
-            if env not in BACKENDS:
-                raise ValueError(
-                    f"invalid backend {env!r} in environment variable "
-                    f"{var}; valid backends: {BACKENDS}")
             return env
     return "pallas" if _on_tpu() else _validate(off_tpu_fallback)
 

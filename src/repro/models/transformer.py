@@ -138,7 +138,7 @@ def forward(params, batch, cfg):
             n = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
             carry = (x, aux)
             for i in range(n):
-                carry, _ = body(carry, jax.tree.map(lambda q: q[i],
+                carry, _ = body(carry, jax.tree.map(lambda q, i=i: q[i],
                                                     seg_params))
             return carry
         (x, aux), _ = jax.lax.scan(body, (x, aux), seg_params)
@@ -150,7 +150,7 @@ def forward(params, batch, cfg):
         def body(carry, p_group):
             h, a = carry
             for j in range(period):
-                p_layer = jax.tree.map(lambda q: q[j], p_group)
+                p_layer = jax.tree.map(lambda q, j=j: q[j], p_group)
                 h, da = blk.block_forward(p_layer, h, cfg, ("ssm", "none"),
                                           positions)
                 a = a + da
@@ -164,7 +164,7 @@ def forward(params, batch, cfg):
             n = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
             carry = (x, aux)
             for i in range(n):
-                carry, _ = body(carry, jax.tree.map(lambda q: q[i],
+                carry, _ = body(carry, jax.tree.map(lambda q, i=i: q[i],
                                                     seg_params))
             return carry
         (x, aux), _ = jax.lax.scan(body, (x, aux), seg_params)
@@ -242,9 +242,10 @@ def decode_step(params, state: DecodeState, tokens, cfg):
             if cfg.unroll:
                 cs = []
                 for i in range(n):
-                    x, ci = body(x, (jax.tree.map(lambda q: q[i],
+                    x, ci = body(x, (jax.tree.map(lambda q, i=i: q[i],
                                                   seg_params),
-                                     jax.tree.map(lambda q: q[i], cache)))
+                                     jax.tree.map(lambda q, i=i: q[i],
+                                                  cache)))
                     cs.append(ci)
                 cache = jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
             else:
@@ -258,8 +259,8 @@ def decode_step(params, state: DecodeState, tokens, cfg):
                 p_group, c_group, c_shared = xs
                 cs = []
                 for j in range(period):
-                    p_layer = jax.tree.map(lambda q: q[j], p_group)
-                    c_layer = jax.tree.map(lambda q: q[j], c_group)
+                    p_layer = jax.tree.map(lambda q, j=j: q[j], p_group)
+                    c_layer = jax.tree.map(lambda q, j=j: q[j], c_group)
                     h, c_new = blk.block_decode(p_layer, h, cfg,
                                                 ("ssm", "none"), c_layer,
                                                 pos)
@@ -273,9 +274,10 @@ def decode_step(params, state: DecodeState, tokens, cfg):
                 n_groups = seg[1]
                 for i in range(n_groups):
                     x, (cg, csh) = body(
-                        x, (jax.tree.map(lambda q: q[i], seg_params),
-                            jax.tree.map(lambda q: q[i], cache),
-                            jax.tree.map(lambda q: q[i], shared_cache)))
+                        x, (jax.tree.map(lambda q, i=i: q[i], seg_params),
+                            jax.tree.map(lambda q, i=i: q[i], cache),
+                            jax.tree.map(lambda q, i=i: q[i],
+                                         shared_cache)))
                     groups.append(cg)
                     shareds.append(csh)
                 cache = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)

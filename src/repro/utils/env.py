@@ -1,0 +1,71 @@
+"""Canonical ``REPRO_*`` environment-variable registry.
+
+Every environment variable the package reads is declared HERE, with its
+meaning, and read through the typed accessors below.  Scattered
+``os.environ.get("REPRO_...")`` calls are forbidden by reprolint rule
+RL003 — a typo'd variable name then fails loudly at the registry
+(``unknown env var``) instead of silently reading nothing, which is the
+PR-3 bug class (a misspelled backend override that fell through to the
+default for months of wall-clock).
+
+Adding a variable: add it to :data:`ENV_VARS` with a one-line doc, and
+read it via :func:`read_str` / :func:`read_choice` / :func:`read_int` /
+:func:`read_flag`.  The reprolint AST pass cross-checks every
+``REPRO_*`` string literal in ``src/`` against this table.
+"""
+from __future__ import annotations
+
+import os
+
+ENV_VARS: dict[str, str] = {
+    "REPRO_KERNEL_BACKEND":
+        "default kernel backend for repro.kernels.ops when an op gets "
+        "backend=None: 'pallas' | 'pallas-interpret' | 'xla-ref'",
+    "REPRO_ENGINE_BACKEND":
+        "default AltgdminEngine backend (falls back to "
+        "REPRO_KERNEL_BACKEND, then xla-ref off-TPU); same choices",
+}
+
+
+def _lookup(name: str) -> str | None:
+    if name not in ENV_VARS:
+        raise KeyError(
+            f"unknown env var {name!r}: every REPRO_* variable must be "
+            f"declared in repro.utils.env.ENV_VARS (declared: "
+            f"{sorted(ENV_VARS)})")
+    val = os.environ.get(name)
+    return val if val else None          # unset and empty are both "off"
+
+
+def read_str(name: str) -> str | None:
+    """The variable's value, or None when unset/empty."""
+    return _lookup(name)
+
+
+def read_choice(name: str, choices) -> str | None:
+    """A validated enum read: unset → None, a value outside ``choices``
+    → ValueError naming the offending variable."""
+    val = _lookup(name)
+    if val is not None and val not in choices:
+        raise ValueError(
+            f"invalid value {val!r} in environment variable {name}; "
+            f"valid choices: {tuple(choices)}")
+    return val
+
+
+def read_int(name: str) -> int | None:
+    val = _lookup(name)
+    if val is None:
+        return None
+    try:
+        return int(val)
+    except ValueError:
+        raise ValueError(f"environment variable {name} must be an "
+                         f"integer, got {val!r}") from None
+
+
+def read_flag(name: str) -> bool:
+    """Boolean read: '1'/'true'/'yes'/'on' (any case) → True; unset or
+    anything else → False."""
+    val = _lookup(name)
+    return val is not None and val.lower() in ("1", "true", "yes", "on")

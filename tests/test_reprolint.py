@@ -1,0 +1,357 @@
+"""The static-analysis suite itself (PR-10 tentpole, tools/reprolint).
+
+Each rule is fed a known-bad planted fixture (a bare assert, a dense
+(L, L) einsum, an f64→f32 cast, an undeclared env read, …) and must
+catch it; each sanctioned/allowlisted pattern must pass.  The tree-wide
+invariants (all 12 programs × 3 substrates clean) run in a subprocess
+with 8 fake host devices, same as CI's ``analysis`` job.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from repro.analysis import astlint, findings as fnd, jaxlint
+from repro.analysis.harness import Trace
+from repro.core.program import DispatchBudget, get_program
+
+
+def _rules(found):
+    return sorted({f.rule for f in found})
+
+
+def check(src, path, rules=astlint.ALL_RULES):
+    return astlint.check_source(textwrap.dedent(src), path, rules)
+
+
+# ------------------------------------------------------------- RL001
+
+def test_rl001_catches_bare_assert_in_kernels():
+    found = check("""
+        def _kernel(x_ref, o_ref):
+            assert x_ref.shape[0] % 8 == 0
+            o_ref[...] = x_ref[...]
+    """, "src/repro/kernels/planted.py")
+    assert _rules(found) == ["RL001"]
+
+
+def test_rl001_ignores_raises_and_non_kernel_files():
+    src = """
+        def _kernel(x):
+            if x.shape[0] % 8:
+                raise ValueError("bad block")
+            return x
+    """
+    assert check(src, "src/repro/kernels/ok.py") == []
+    # asserts OUTSIDE kernels/ are not RL001's business
+    assert check("def f(x):\n    assert x\n", "src/repro/core/x.py") == []
+
+
+def test_rl001_inline_allow_marker():
+    found = check("""
+        def _kernel(x):
+            assert x  # reprolint: allow=RL001 — trace-time shape contract, unreachable at runtime
+    """, "src/repro/kernels/planted.py")
+    assert found == []
+
+
+# ------------------------------------------------------------- RL002
+
+def test_rl002_catches_unguarded_densify():
+    found = check("""
+        def hot_path(graph):
+            W = graph.to_dense()
+            return W @ W
+    """, "src/repro/distributed/planted.py")
+    assert _rules(found) == ["RL002"]
+
+
+def test_rl002_catches_adj_access():
+    found = check("def f(g):\n    return g.adj.sum()\n",
+                  "src/repro/core/planted.py")
+    assert _rules(found) == ["RL002"]
+
+
+def test_rl002_allowlisted_patterns_pass():
+    # the defining module is file-level exempt
+    assert check("def f(g):\n    return g.adj\n",
+                 "src/repro/distributed/graphs.py") == []
+    # a justified marker suppresses
+    found = check("""
+        def f(g):
+            return g.to_dense()  # reprolint: allow=RL002 — init tier, L <= DENSE_MATERIALIZE_MAX
+    """, "src/repro/core/ok.py")
+    assert found == []
+
+
+def test_marker_without_justification_is_itself_a_finding():
+    found = check("""
+        def f(g):
+            return g.to_dense()  # reprolint: allow=RL002
+    """, "src/repro/core/bad.py")
+    assert "RL000" in _rules(found) and "RL002" in _rules(found)
+
+
+# ------------------------------------------------------------- RL003
+
+def test_rl003_catches_stray_env_read():
+    found = check("""
+        import os
+        def f():
+            return os.environ.get("REPRO_KERNEL_BACKEND")
+    """, "src/repro/core/planted.py")
+    assert any(f.rule == "RL003" and "registry" in f.message
+               for f in found)
+
+
+def test_rl003_catches_undeclared_variable_typo():
+    # the PR-3 bug class: a typo'd name silently reads nothing
+    found = check("""
+        def f(read_str):
+            return read_str("REPRO_KERNEL_BACKEMD")
+    """, "src/repro/core/planted.py")
+    assert any(f.rule == "RL003" and "not declared" in f.message
+               for f in found)
+
+
+def test_rl003_registry_and_declared_literals_pass():
+    # declared names referenced anywhere are fine
+    assert check("""
+        from repro.utils import env
+        def f():
+            return env.read_str("REPRO_KERNEL_BACKEND")
+    """, "src/repro/core/ok.py") == []
+    # the registry module itself may touch os.environ
+    assert check("""
+        import os
+        def _lookup(name):
+            return os.environ.get(name)
+    """, "src/repro/utils/env.py") == []
+
+
+# ------------------------------------------------------------- RL004
+
+def test_rl004_catches_global_rng():
+    found = check("""
+        import numpy as np
+        def f():
+            return np.random.rand(3)
+    """, "src/repro/core/planted.py")
+    assert _rules(found) == ["RL004"]
+
+
+def test_rl004_catches_unseeded_default_rng():
+    found = check("import numpy as np\nrng = np.random.default_rng()\n",
+                  "src/repro/core/planted.py")
+    assert _rules(found) == ["RL004"]
+
+
+def test_rl004_seeded_rng_passes():
+    assert check("import numpy as np\nrng = np.random.default_rng(0)\n",
+                 "src/repro/core/ok.py") == []
+
+
+# ------------------------------------------------------------- RL005
+
+def test_rl005_catches_attribute_mutation():
+    found = check("""
+        def _upd_planted(ctx, U, aux, tau):
+            ctx.cache = U
+            return U, aux, None
+    """, "src/repro/core/planted.py")
+    assert any(f.detail.startswith("mutation") for f in found)
+
+
+def test_rl005_catches_foreign_capture():
+    found = check("""
+        GLOBAL_STATE = []
+        def _upd_planted(ctx, U, aux, tau):
+            GLOBAL_STATE.append(tau)
+            return U, aux, None
+    """, "src/repro/core/planted.py")
+    assert any("capture" in f.detail and "GLOBAL_STATE" in f.detail
+               for f in found)
+
+
+def test_rl005_catches_python_if_on_tracer():
+    found = check("""
+        def _upd_planted(ctx, U, aux, tau):
+            if tau > 0:
+                U = ctx.mix(U)
+            return U, aux, None
+    """, "src/repro/core/planted.py")
+    assert any(f.detail.startswith("tracer-if") for f in found)
+
+
+def test_rl005_real_update_idioms_pass():
+    # the three patterns the real bodies use: ctx-attr None test,
+    # builtins (range), and the declared-pure ExactDiffusionCombine
+    src = """
+        def _upd_ok(ctx, U, cstate, tau):
+            for j in range(ctx.local_steps):
+                U = ctx.qr(U)
+            sf = (ctx.send_fraction(U, cstate)
+                  if ctx.send_fraction is not None else None)
+            phi = ExactDiffusionCombine.correct(U, U, U)
+            return ctx.qr(phi), cstate, sf
+    """
+    assert check(src, "src/repro/core/ok.py") == []
+
+
+# ------------------------------------------------------------- RL006
+
+def test_rl006_catches_rogue_runtime_function():
+    found = check("""
+        def _altgdmin_mesh(): pass
+        def _altgdmin_virtual_mesh(): pass
+        def dif_altgdmin_mesh(): pass
+    """, "src/repro/core/runtime.py")
+    assert any(f.rule == "RL006" and "dif_altgdmin_mesh" in f.symbol
+               for f in found)
+
+
+def test_rl006_catches_missing_skeleton():
+    found = check("def _altgdmin_mesh(): pass\n",
+                  "src/repro/core/runtime.py")
+    assert any(f.detail == "missing:_altgdmin_virtual_mesh" for f in found)
+
+
+def test_check_runtime_clean_delegates():
+    r = subprocess.run(
+        [sys.executable, "tools/check_runtime_clean.py"],
+        capture_output=True, text=True, cwd=REPO_ROOT, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "RL006" in r.stdout
+
+
+# ----------------------------------------------------- jaxpr analyzers
+
+def _fake_trace(fn, *args, L, substrate="simulator", budget=None,
+                rounds=1, n_shifts=0):
+    program = types.SimpleNamespace(name="planted",
+                                    dispatch_budget=budget)
+    import jax
+    return Trace(program=program, substrate=substrate,
+                 dtype=args[0].dtype, jaxpr=jax.make_jaxpr(fn)(*args),
+                 L=L, rounds=rounds, n_shifts=n_shifts, local_steps=1)
+
+
+def test_jx002_catches_planted_dense_einsum():
+    L = 8
+    x = jnp.ones((L, 5))
+
+    def planted(x):
+        return jnp.einsum("id,jd->ij", x, x)    # (L, L) born here
+
+    found = jaxlint.check_dense_node_axis(_fake_trace(planted, x, L=L))
+    assert found and all(f.rule == "JX002" for f in found)
+    assert any("L=8" in f.message for f in found)
+
+
+def test_jx002_passthrough_of_existing_dense_operand_ok():
+    L = 8
+    W = jnp.ones((L, L))
+
+    def passthrough(W):
+        return (2.0 * W).T                       # inherits, never creates
+
+    assert jaxlint.check_dense_node_axis(_fake_trace(passthrough, W,
+                                                     L=L)) == []
+
+
+def test_jx003_catches_planted_narrowing_cast():
+    x = jnp.ones((4,), jnp.float64)
+
+    def planted(x):
+        return x.astype(jnp.float32) * 2.0       # f64 → f32
+
+    found = jaxlint.check_precision_flow(_fake_trace(planted, x, L=8))
+    assert found and all(f.rule == "JX003" for f in found)
+
+
+def test_jx003_widening_and_f32_only_pass():
+    x32 = jnp.ones((4,), jnp.float32)
+    x64 = jnp.ones((4,), jnp.float64)
+    t = _fake_trace(lambda x: x.astype(jnp.float64) + 1.0, x32, L=8)
+    assert jaxlint.check_precision_flow(t) == []
+    t = _fake_trace(lambda x: x + 1.0, x64, L=8)
+    assert jaxlint.check_precision_flow(t) == []
+
+
+def test_jx001_budget_formula():
+    b = DispatchBudget(simulator=(1, 2, 0, 0), mesh=(1, 2, 1, 0),
+                       virtual=(1, 1, 0, 0), wire_mesh=2)
+    assert b.per_iter("simulator", 2, 0, 1) == 5
+    assert b.per_iter("mesh", 2, 6, 1) == 17    # dif_quantized, mesh
+    assert b.per_iter("virtual", 2, 7, 1) == 3
+
+
+def test_every_program_declares_a_budget():
+    from repro.core.program import program_names
+    for name in program_names():
+        assert get_program(name).dispatch_budget is not None, name
+
+
+def test_registry_exposes_budget():
+    from repro.api.registry import get_solver
+    s = get_solver("dif_altgdmin")
+    assert s.dispatch_budget is s.program.dispatch_budget is not None
+
+
+# ------------------------------------------------------------ baseline
+
+def test_baseline_roundtrip_and_stale_detection(tmp_path):
+    f1 = fnd.Finding(rule="RL001", path="a.py", line=3, symbol="f",
+                     message="m", detail="assert:f")
+    p = tmp_path / "baseline.json"
+    fnd.write_baseline(p, [f1])
+    # the skeleton's TODO justification refuses to load
+    with pytest.raises(ValueError, match="TODO|justification"):
+        fnd.load_baseline(p)
+    data = json.loads(p.read_text())
+    data["suppressions"][0]["justification"] = "known, tracked in #12"
+    p.write_text(json.dumps(data))
+    base = fnd.load_baseline(p)
+    new, sup, stale = fnd.split_by_baseline([f1], base)
+    assert (new, len(sup), stale) == ([], 1, [])
+    # once the finding is fixed, the entry goes stale
+    new, sup, stale = fnd.split_by_baseline([], base)
+    assert stale == [f1.fingerprint]
+
+
+def test_shipped_baseline_is_empty():
+    data = json.loads(open(os.path.join(
+        REPO_ROOT, "tools/reprolint/baseline.json")).read())
+    assert data == {"suppressions": []}
+
+
+# ------------------------------------------------- tree-wide invariants
+
+def test_ast_rules_clean_on_tree():
+    assert astlint.run_ast_rules(REPO_ROOT) == []
+
+
+def test_jaxpr_rules_clean_on_simulator_in_process():
+    """The simulator substrate needs no fake devices — run one compressed
+    and one masked program in-process; the full 12 × 3 matrix runs in
+    the subprocess test below and in CI."""
+    for name in ("dif_quantized", "dif_pushsum"):
+        found = jaxlint.analyze_program(name, ("simulator",))
+        assert found == [], [f.render() for f in found]
+
+
+@pytest.mark.parametrize("args", [("--ast",), ("--jaxpr",)])
+def test_reprolint_cli_clean_subprocess(args):
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", *args],
+        capture_output=True, text=True, cwd=REPO_ROOT, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "reprolint: clean" in r.stdout

@@ -1,45 +1,37 @@
 #!/usr/bin/env python
 """Guard: repro.core.runtime holds ONLY the substrate skeletons.
 
-The PR-9 refactor collapsed the per-solver ``*_mesh`` closures into
-:class:`repro.core.program.SolverProgram` lowerings; the runtime module
-keeps just the two shard_map iteration skeletons.  This check fails CI
-if a hand-written solver function grows back there — new solvers
-register a program (see README "Solver programs") and get all three
-substrates derived.
+This check is now reprolint rule RL006 — this script remains as a thin
+delegate for callers of the historical entry point (CI used to run it
+standalone; tests/test_programs.py still subprocess-calls it).  The one
+canonical analysis entry point is ``python -m tools.reprolint --all``.
 
 Run from the repo root: ``python tools/check_runtime_clean.py``.
 """
 from __future__ import annotations
 
-import ast
 import pathlib
 import sys
 
-RUNTIME = pathlib.Path(__file__).resolve().parent.parent / (
-    "src/repro/core/runtime.py")
-
-# the substrate skeletons — the ONLY top-level functions allowed
-ALLOWED = {"_altgdmin_mesh", "_altgdmin_virtual_mesh"}
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+RUNTIME = ROOT / "src/repro/core/runtime.py"
 
 
 def main() -> int:
-    tree = ast.parse(RUNTIME.read_text(), filename=str(RUNTIME))
-    top_level = [n.name for n in tree.body
-                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
-    rogue = [n for n in top_level if n not in ALLOWED]
-    missing = ALLOWED - set(top_level)
-    if rogue:
-        print(f"FAIL: solver-specific functions in {RUNTIME.name}: "
-              f"{rogue}\nRegister a SolverProgram in repro.core.program "
-              f"instead — the lowerings derive every substrate.")
-        return 1
-    if missing:
-        print(f"FAIL: expected skeleton(s) missing from {RUNTIME.name}: "
-              f"{sorted(missing)}")
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.analysis.astlint import RUNTIME_ALLOWED, check_source
+
+    findings = check_source(RUNTIME.read_text(),
+                            RUNTIME.relative_to(ROOT).as_posix(),
+                            rules=("RL006",))
+    if findings:
+        for f in findings:
+            print(f"FAIL: {f.render()}")
+        print("Register a SolverProgram in repro.core.program instead — "
+              "the lowerings derive every substrate.")
         return 1
     print(f"OK: {RUNTIME.name} holds only the substrate skeletons "
-          f"{sorted(ALLOWED)}")
+          f"{sorted(RUNTIME_ALLOWED)} (reprolint RL006)")
     return 0
 
 

@@ -1,0 +1,1 @@
+"""CLI front-end for :mod:`repro.analysis` — see ``__main__.py``."""

@@ -1,0 +1,31 @@
+"""``python -m tools.reprolint`` — the ONE static-analysis entry point.
+
+Prepares the environment the jaxpr level needs BEFORE jax loads — 8
+fake host devices for the mesh/virtual traces, x64 for the precision
+rule — then hands off to :func:`repro.analysis.driver.main`.  Run from
+the repo root::
+
+    python -m tools.reprolint --all          # CI: every rule
+    python -m tools.reprolint --ast          # source rules only (fast)
+    python -m tools.reprolint --jaxpr --program dif_altgdmin
+"""
+import os
+import pathlib
+import sys
+
+# must precede the first jax import: device count is fixed at init
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+if str(_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(_ROOT / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)   # the JX003 f64 traces
+
+from repro.analysis.driver import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
